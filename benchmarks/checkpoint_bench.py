@@ -1,0 +1,87 @@
+"""Checkpoint benchmark: marshalled (arena) save/restore vs per-leaf I/O.
+
+A checkpoint IS a marshalled deep copy (DESIGN.md §3.1): one contiguous
+buffer per dtype + an offset manifest, vs. the per-leaf scheme's one file
+per tensor.  Also times pointerchain-over-the-manifest selective restore.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.models import registry
+
+
+def _state(n_layers=48, d=64):
+    """Many-small-leaves state (the realistic case: per-layer norms, biases,
+    moments — where per-leaf I/O pays per-file overhead and the arena wins)."""
+    rng = np.random.default_rng(0)
+    return {"params": {"blocks": {
+        f"layer{i}": {"w1": rng.standard_normal((d, 4 * d)).astype(np.float32),
+                      "w2": rng.standard_normal((4 * d, d)).astype(np.float32),
+                      "b1": np.zeros(4 * d, np.float32),
+                      "b2": np.zeros(d, np.float32),
+                      "scale": np.ones(d, np.float32),
+                      "mu_w1": np.zeros((d, 4 * d), np.float32),
+                      "nu_w1": np.zeros((d, 4 * d), np.float32)}
+        for i in range(n_layers)}},
+        "step": np.int32(7)}
+
+
+def _per_leaf_save(state, d):
+    from repro.core.treepath import leaf_items
+    os.makedirs(d, exist_ok=True)
+    for i, (p, leaf) in enumerate(leaf_items(state)):
+        np.save(os.path.join(d, f"{i}.npy"), np.asarray(leaf))
+
+
+def run(out=sys.stdout):
+    state = _state()
+    nbytes = sum(np.asarray(l).nbytes for l in jax.tree_util.tree_leaves(state))
+    tmp = tempfile.mkdtemp(prefix="ckpt_bench_")
+    try:
+        t0 = time.perf_counter()
+        ckpt.save(state, os.path.join(tmp, "arena"), 0)
+        t_arena = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        _per_leaf_save(state, os.path.join(tmp, "perleaf"))
+        t_leaf = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        restored = ckpt.load(os.path.join(tmp, "arena"), 0)
+        t_load = time.perf_counter() - t0
+        ok = np.allclose(
+            restored["params"]["blocks"]["layer0"]["w1"],
+            state["params"]["blocks"]["layer0"]["w1"])
+
+        t0 = time.perf_counter()
+        sel = ckpt.selective_restore(os.path.join(tmp, "arena"),
+                                     ["params.blocks.layer0.scale"], 0)
+        t_sel = time.perf_counter() - t0
+
+        n_leaves = len(jax.tree_util.tree_leaves(state))
+        print("op,ms,derived", file=out)
+        print(f"arena_save,{t_arena*1e3:.2f},{nbytes/1e6:.1f}MB in "
+              f"2 files / 2 D2H batches", file=out)
+        print(f"perleaf_save,{t_leaf*1e3:.2f},{nbytes/1e6:.1f}MB in "
+              f"{n_leaves} files / {n_leaves} D2H batches", file=out)
+        print(f"arena_restore,{t_load*1e3:.2f},ok={ok}", file=out)
+        print(f"selective_restore,{t_sel*1e3:.2f},"
+              f"bytes={sum(v.nbytes for v in sel.values())}", file=out)
+        return {"arena_save_ms": t_arena * 1e3,
+                "perleaf_save_ms": t_leaf * 1e3,
+                "restore_ms": t_load * 1e3, "selective_ms": t_sel * 1e3}
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Data-size models (paper Eq. 1-3, Tables 1-2) — exact reproduction."""
+from __future__ import annotations
+
+import sys
+
+from repro.core import datasize_dense, datasize_linear
+
+
+def run(out=sys.stdout):
+    print("table,param1,param2,bytes,paper_units", file=out)
+    # Table 1 (Linear, allinit): rows n, cols k
+    for n in (100, 10**3, 10**4, 10**5, 10**6, 10**7, 10**8):
+        for k in range(2, 11):
+            b = datasize_linear(k, n)
+            unit = f"{b/1024:.2f}KB" if b < 1024**2 * 0.01 else f"{b/1024**2:.2f}MB"
+            print(f"linear_eq1,n={n},k={k},{b},{unit}", file=out)
+    # Table 2 (Dense, D=3)
+    for n in (10, 100, 10**3, 10**4, 10**5):
+        for q in (2, 4, 6, 8, 10, 12, 14, 16):
+            b = datasize_dense(q, n, 3)
+            if b < 1024**2 * 0.01:
+                unit = f"{b/1024:.2f}KB"
+            elif b < 1024**3 * 0.005:
+                unit = f"{b/1024**2:.2f}MB"
+            else:
+                unit = f"{b/1024**3:.2f}GB"
+            print(f"dense_eq3,n={n},q={q},{b},{unit}", file=out)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,103 @@
+"""Instruction-count analogue of paper Tables 3-4 (PTX LOC -> jaxpr + dispatch).
+
+On the GPU each pointer dereference costs 2 instructions.  In JAX the
+device program does NOT grow with chain depth — XLA dead-code-eliminates
+untouched interior leaves (a hardware-adaptation finding the PGI compiler
+could not make; see DESIGN.md §2.1).  What DOES grow, and what this table
+measures, is the host side of the chain:
+
+  invars       jaxpr inputs the region must marshal (the LOC analogue) —
+               whole-tree regions grow ~4 entries per level, pointerchain
+               regions stay flat (the paper's 'PC constant at 60 LOC'),
+  dispatch_us  measured per-call dispatch latency of the jit'd region
+               (pytree flatten/unflatten of the k-level tree vs. extracted
+               leaves) — the 2-loads-per-dereference cost, relocated to
+               where it lives on a TPU system.
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import TreePath, declare, extract
+from repro.launch.hlo_analysis import hlo_line_count
+from .scenarios import (dense_chain, dense_tree, linear_chain, linear_tree,
+                        linear_used_paths)
+from .timer import bench
+
+_SCALE = 1.0001
+
+
+def _measure_whole_tree(tree, paths):
+    """UVM/marshalling style: jit over the full tree; dereference inside."""
+    def fn(t):
+        out = t
+        for p in paths:
+            out = TreePath.parse(p).update(out, lambda a: a * _SCALE)
+        return out
+    jaxpr = jax.make_jaxpr(fn)(tree)
+    lowered = jax.jit(fn).lower(tree)
+    jitted = jax.jit(fn)
+    jax.block_until_ready(jax.tree_util.tree_leaves(jitted(tree))[0])
+    disp = bench("whole", lambda: jitted(tree), min_time=0.05, repeats=2)
+    return {"invars": len(jaxpr.jaxpr.invars), "eqns": len(jaxpr.eqns),
+            "hlo_lines": hlo_line_count(lowered.as_text()),
+            "dispatch_us": disp.us_per_call}
+
+
+def _measure_pointerchain(tree, paths):
+    refs = declare(tree, *paths)
+    leaves = [jax.numpy.asarray(l) for l in extract(tree, refs)]
+
+    def fn(*ls):
+        return [l * _SCALE for l in ls]
+    jaxpr = jax.make_jaxpr(fn)(*leaves)
+    lowered = jax.jit(fn).lower(*leaves)
+    jitted = jax.jit(fn)
+    jax.block_until_ready(jitted(*leaves)[0])
+    disp = bench("pc", lambda: jitted(*leaves), min_time=0.05, repeats=2)
+    return {"invars": len(jaxpr.jaxpr.invars), "eqns": len(jaxpr.eqns),
+            "hlo_lines": hlo_line_count(lowered.as_text()),
+            "dispatch_us": disp.us_per_call}
+
+
+def run(ks=(2, 3, 4, 5, 6, 7, 8, 9, 10), n=64, out=sys.stdout):
+    rows = []
+    print("table,k,layout,scheme,invars,eqns,hlo_lines,dispatch_us,"
+          "delta_invars_vs_uvm_pct", file=out)
+    for layout in ("allinit-allused", "allinit-LLused", "LLinit-LLused"):
+        for k in ks:
+            tree = linear_tree(k, n, layout)
+            paths = linear_used_paths(k, layout)
+            whole = _measure_whole_tree(tree, paths)      # == UVM == marshal
+            pc = _measure_pointerchain(tree, paths)
+            for scheme, m in (("uvm", whole), ("marshal", whole),
+                              ("pointerchain", pc)):
+                delta = 100.0 * (m["invars"] - whole["invars"]) \
+                    / max(1, whole["invars"])
+                rows.append(dict(table="linear", k=k, layout=layout,
+                                 scheme=scheme, **m, delta=delta))
+                print(f"linear,{k},{layout},{scheme},{m['invars']},"
+                      f"{m['eqns']},{m['hlo_lines']},"
+                      f"{m['dispatch_us']:.1f},{delta:.0f}", file=out)
+    # Dense (Table 4): one chained leaf at depth 3
+    tree = dense_tree(4, n, 3)
+    paths = [dense_chain(4, 3)]
+    whole = _measure_whole_tree(tree, paths)
+    pc = _measure_pointerchain(tree, paths)
+    for scheme, m in (("uvm", whole), ("marshal", whole),
+                      ("pointerchain", pc)):
+        delta = 100.0 * (m["invars"] - whole["invars"]) \
+            / max(1, whole["invars"])
+        rows.append(dict(table="dense", k=3, layout="selective",
+                         scheme=scheme, **m, delta=delta))
+        print(f"dense,3,selective,{scheme},{m['invars']},{m['eqns']},"
+              f"{m['hlo_lines']},{m['dispatch_us']:.1f},{delta:.0f}",
+              file=out)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

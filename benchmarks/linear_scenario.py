@@ -1,0 +1,53 @@
+"""Linear scenario (paper §4.1, Figs. 5-6): nesting depth vs. transfer scheme.
+
+Sweeps k (chain depth) x n (payload) x layout x scheme; reports wall-clock
+and kernel time normalized to UVM (the paper's presentation) plus the data
+motion each scheme issued.  CSV: one row per cell.
+"""
+from __future__ import annotations
+
+import sys
+from typing import List
+
+from .scenarios import (Measurement, linear_tree, linear_used_paths,
+                        run_algorithm2)
+
+SCHEMES = ("uvm", "marshal", "pointerchain")
+LAYOUTS = ("allinit-allused", "allinit-LLused", "LLinit-LLused")
+
+
+def run(ks=(2, 6, 10), ns=(10**3, 10**5), layouts=LAYOUTS, out=sys.stdout,
+        repeats: int = 3) -> List[dict]:
+    rows = []
+    print("scenario,k,n,layout,scheme,wall_us,kernel_us,"
+          "h2d_bytes,h2d_calls,norm_wall_vs_uvm", file=out)
+    for k in ks:
+        for n in ns:
+            for layout in layouts:
+                tree = linear_tree(k, n, layout)
+                used = linear_used_paths(k, layout)
+                base = None
+                for scheme in SCHEMES:
+                    best = None
+                    for _ in range(repeats):
+                        m = run_algorithm2(tree, used, scheme)
+                        assert m.ok, f"check failed: {scheme} k={k} n={n}"
+                        if best is None or m.wall_us < best.wall_us:
+                            best = m
+                    if scheme == "uvm":
+                        base = best.wall_us
+                    rows.append(dict(k=k, n=n, layout=layout, scheme=scheme,
+                                     wall_us=best.wall_us,
+                                     kernel_us=best.kernel_us,
+                                     h2d_bytes=best.h2d_bytes,
+                                     h2d_calls=best.h2d_calls,
+                                     norm=best.wall_us / base))
+                    print(f"linear,{k},{n},{layout},{scheme},"
+                          f"{best.wall_us:.1f},{best.kernel_us:.1f},"
+                          f"{best.h2d_bytes},{best.h2d_calls},"
+                          f"{best.wall_us / base:.3f}", file=out)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

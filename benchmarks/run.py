@@ -1,0 +1,117 @@
+"""Benchmark driver: one section per paper table/figure + framework benches.
+
+    PYTHONPATH=src python -m benchmarks.run            # full suite
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized sweep
+
+Sections (paper artifact -> module):
+    datasize            Eq. 1-3 / Tables 1-2     benchmarks.datasize
+    linear              §4.1 / Figs. 5-6         benchmarks.linear_scenario
+    dense               §4.2 / Fig. 7            benchmarks.dense_scenario
+    instructions        §6.3 / Tables 3-4        benchmarks.instruction_count
+    marshal_kernel      Alg. 1 as a TPU kernel   benchmarks (inline)
+    checkpoint          marshalled ckpt I/O      benchmarks.checkpoint_bench
+    collective_fusion   arena-fused psums        benchmarks.collective_fusion
+    roofline            §Roofline summary        benchmarks.roofline
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def _section(name):
+    print(f"\n===== {name} =====", flush=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip", default="",
+                    help="comma-separated section names to skip")
+    args = ap.parse_args(argv)
+    skip = set(filter(None, args.skip.split(",")))
+    t0 = time.time()
+
+    if "datasize" not in skip:
+        _section("datasize (Eq. 1-3, Tables 1-2)")
+        from . import datasize
+        import io
+        buf = io.StringIO()
+        datasize.run(out=buf)
+        lines = buf.getvalue().splitlines()
+        print("\n".join(lines[:8] + [f"... ({len(lines)} rows total)"]))
+
+    if "linear" not in skip:
+        _section("linear scenario (Figs. 5-6)")
+        from . import linear_scenario
+        if args.quick:
+            linear_scenario.run(ks=(2, 6), ns=(10**3,), repeats=1)
+        else:
+            linear_scenario.run()
+
+    if "dense" not in skip:
+        _section("dense scenario (Fig. 7)")
+        from . import dense_scenario
+        if args.quick:
+            dense_scenario.run(qs=(4,), ns=(10**3,), repeats=1)
+        else:
+            dense_scenario.run()
+
+    if "instructions" not in skip:
+        _section("instruction count (Tables 3-4)")
+        from . import instruction_count
+        instruction_count.run(ks=(2, 4, 6, 8, 10) if args.quick
+                              else (2, 3, 4, 5, 6, 7, 8, 9, 10))
+
+    if "marshal_kernel" not in skip:
+        _section("marshal_pack kernel (Alg. 1 on TPU, interpret on CPU)")
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.kernels.marshal_pack import kernel as mk
+        from .timer import bench
+        n_tiles = 64
+        src = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (n_tiles * mk.SUBLANE, mk.LANE)), jnp.float32)
+        tmap = jnp.asarray(np.random.default_rng(1).permutation(n_tiles)
+                           .astype(np.int32))
+        fn = lambda: jax.block_until_ready(
+            mk.gather_tiles(src, tmap, interpret=True))
+        r = bench("marshal_pack_interpret", fn, min_time=0.05, repeats=2)
+        mb = src.nbytes / 1e6
+        print("name,us_per_call,derived")
+        print(r.csv(f"{mb:.2f}MB/call (interpret-mode: correctness proxy)"))
+
+    if "checkpoint" not in skip:
+        _section("checkpoint (marshalled vs per-leaf)")
+        from . import checkpoint_bench
+        checkpoint_bench.run()
+
+    if "collective_fusion" not in skip:
+        _section("collective fusion (arena psum vs per-tensor)")
+        from . import collective_fusion
+        try:
+            collective_fusion.run()
+        except Exception as e:  # subprocess-heavy; report, don't die
+            print(f"collective_fusion skipped: {e}")
+
+    if "roofline" not in skip:
+        _section("roofline summary (from artifacts/dryrun)")
+        art = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "artifacts", "dryrun")
+        if os.path.isdir(art) and os.listdir(art):
+            from . import roofline
+            rows = roofline.run(art)
+            print(f"({len(rows)} cells analysed)")
+        else:
+            print("no dry-run artifacts found; run "
+                  "`python -m repro.launch.dryrun --all --mesh both "
+                  "--out artifacts/dryrun` first")
+
+    print(f"\n[benchmarks.run] done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

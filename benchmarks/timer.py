@@ -1,0 +1,48 @@
+"""Google-Benchmark-style adaptive timer (the paper uses Google Benchmark).
+
+Learns the iteration count needed for a stable measurement: doubles
+iterations until the repetition takes >= min_time, then reports mean/stddev
+over ``repeats`` repetitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class BenchResult:
+    name: str
+    us_per_call: float
+    stddev_us: float
+    iterations: int
+    repeats: int
+
+    def csv(self, derived: str = "") -> str:
+        return f"{self.name},{self.us_per_call:.2f},{derived}"
+
+
+def bench(name: str, fn: Callable[[], None], *, min_time: float = 0.1,
+          max_iters: int = 1_000_000, repeats: int = 3,
+          warmup: int = 1) -> BenchResult:
+    for _ in range(warmup):
+        fn()
+    iters = 1
+    while True:
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        dt = time.perf_counter() - t0
+        if dt >= min_time or iters >= max_iters:
+            break
+        iters = min(max_iters, max(iters * 2, int(iters * min_time / max(dt, 1e-9))))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn()
+        times.append((time.perf_counter() - t0) / iters * 1e6)
+    mean = sum(times) / len(times)
+    var = sum((t - mean) ** 2 for t in times) / len(times)
+    return BenchResult(name, mean, var ** 0.5, iters, repeats)

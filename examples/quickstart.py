@@ -1,0 +1,72 @@
+"""Quickstart: the deep-copy engine in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's Figure-1 example as a pytree: declare a pointer chain,
+compare the three transfer schemes' data motion, and marshal the whole tree.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (MarshalScheme, PointerChainScheme, UVMScheme,
+                        chain_call, declare, extract, pack, region, unpack,
+                        tree_bytes)
+
+
+def main():
+    # Figure 1: simulation -> atoms -> traits -> positions
+    simulation = {
+        "atoms": {
+            "traits": {"positions": jnp.zeros((1024, 3)),
+                       "momenta": jnp.zeros((1024, 3)),
+                       "forces": jnp.zeros((1024, 3))},
+            "N": jnp.int32(1024),
+        },
+        "box": jnp.eye(3),
+    }
+    print(f"tree: {tree_bytes(simulation)/1e3:.1f} KB, "
+          f"{len(jax.tree_util.tree_leaves(simulation))} leaves\n")
+
+    # -- pointerchain: declare once, use everywhere -------------------------
+    refs = declare(simulation, "atoms.traits.positions")
+    print(f"declared chain: {refs[0]}  (effective address = flat leaf index)")
+
+    # region with write-back (paper §3.3 semantics)
+    with region(simulation, refs) as r:
+        r[0] = r[0] + 1.0       # the kernel
+    simulation = r.result
+    print("after region: positions[0] =",
+          np.asarray(simulation["atoms"]["traits"]["positions"][0]), "\n")
+
+    # condensed form (§3.2): declare+region in one call, jit'd over the leaf
+    simulation = chain_call(lambda p: p * 2.0, simulation,
+                            ["atoms.traits.positions"], jit=True)
+
+    # -- the three transfer schemes, with their data motion -----------------
+    for name, scheme in (("uvm", UVMScheme()), ("marshal", MarshalScheme()),
+                         ("pointerchain", PointerChainScheme())):
+        if name == "pointerchain":
+            dev = scheme.to_device(simulation, paths=["atoms.traits.positions"])
+        elif name == "uvm":
+            dev = scheme.materialize(scheme.to_device(simulation),
+                                     paths=["atoms.traits.positions"])
+        else:
+            dev = scheme.to_device(simulation)
+        led = scheme.ledger
+        print(f"{name:13s} H2D: {led.h2d_calls} transfer(s), "
+              f"{led.h2d_bytes/1e3:8.1f} KB")
+
+    # -- marshalling by hand: Algorithm 1 ------------------------------------
+    buffers, layout = pack(simulation)
+    print(f"\nmarshalled: {[(b, v.shape) for b, v in buffers.items()]}")
+    print(f"requestList: {layout.num_leaves} slots, "
+          f"{layout.total_bytes()/1e3:.1f} KB total")
+    restored = unpack(buffers, layout)
+    assert np.allclose(np.asarray(restored["atoms"]["traits"]["positions"]),
+                       np.asarray(simulation["atoms"]["traits"]["positions"]))
+    print("attach (unpack) verified: leaves reconstructed from the arena")
+
+
+if __name__ == "__main__":
+    main()

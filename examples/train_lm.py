@@ -1,0 +1,80 @@
+"""End-to-end driver: train a ~100M-param llama-family model.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300 [--arch llama3.2-1b]
+
+Runs the production train loop on CPU with a reduced-width llama3.2 config
+(~100M params), deterministic learnable data, async marshalled checkpoints,
+straggler watchdog, and a simulated node failure at step 120 to demonstrate
+checkpoint-restart.  A few hundred steps drive the bigram loss well below
+the unigram entropy floor.
+"""
+import argparse
+import dataclasses
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import SyntheticLM
+from repro.models import registry
+from repro.models.specs import param_count
+from repro.models import lm as lm_mod
+from repro.optim import make_optimizer, warmup_cosine
+from repro.runtime import NodeFailure, make_train_step, run, train_state
+
+
+def config_100m() -> ModelConfig:
+    base = registry.load_config("llama3.2-1b")
+    return dataclasses.replace(
+        base, name="llama-100m", num_layers=8, d_model=512, num_heads=8,
+        num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32000,
+        param_dtype="float32", compute_dtype="float32", remat="none")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--fail-at", type=int, default=120,
+                    help="simulate a node failure at this step (-1: off)")
+    args = ap.parse_args()
+
+    cfg = config_100m()
+    api = registry.get_model(cfg)
+    n = param_count(lm_mod.spec_tree(cfg))
+    print(f"model: {cfg.name}  params={n/1e6:.1f}M")
+
+    opt = make_optimizer(cfg.optimizer)
+    lr = warmup_cosine(3e-4, 50, args.steps)
+    step = jax.jit(make_train_step(api, opt, lr), donate_argnums=(0,))
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch)
+
+    ckpt_dir = args.ckpt_dir or os.path.join(tempfile.gettempdir(),
+                                             "repro_train_lm")
+    boom = {"armed": args.fail_at >= 0}
+
+    def injector(s):
+        if boom["armed"] and s == args.fail_at:
+            boom["armed"] = False
+            print(f"\n*** simulated node failure at step {s}; "
+                  f"restarting from latest marshalled checkpoint ***\n")
+            raise NodeFailure("injected")
+
+    res = run(step, lambda: train_state(api, opt, jax.random.PRNGKey(0)),
+              lambda s: data.batch(s), num_steps=args.steps,
+              ckpt_dir=ckpt_dir, ckpt_every=50,
+              failure_injector=injector, log_every=20)
+
+    losses = [m["loss"] for m in res.metrics_history]
+    print(f"\nloss: {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f} "
+          f"(restarts: {res.restarts}, stragglers flagged: "
+          f"{len(res.straggler_steps)})")
+    print(f"checkpoints in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

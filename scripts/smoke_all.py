@@ -1,0 +1,53 @@
+"""Dev script: run a reduced forward/train step for every arch on CPU."""
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.configs.shapes import SHAPES
+
+
+def main():
+    only = sys.argv[1:] or registry.ARCH_IDS
+    for arch in only:
+        t0 = time.time()
+        api = registry.get(arch, smoke=True)
+        cfg = api.cfg
+        key = jax.random.PRNGKey(0)
+        params = api.init(key)
+        shape = SHAPES["train_4k"].smoke()
+        B, S = shape.global_batch, shape.seq_len
+        specs = api.input_specs(type(shape)(shape.name, S, B, "train"))
+        batch = {}
+        for k, v in specs.items():
+            if v.dtype == jnp.int32:
+                batch[k] = jnp.asarray(
+                    np.random.randint(0, cfg.vocab_size, v.shape), jnp.int32)
+            else:
+                batch[k] = jnp.asarray(np.random.randn(*v.shape), v.dtype)
+        loss, metrics = jax.jit(api.loss_fn)(params, batch)
+        assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+
+        # prefill + decode
+        cache = api.init_cache(B, S)
+        kw = {}
+        if "frames" in batch:
+            kw["frames"] = batch["frames"]
+        if "patches" in batch:
+            kw["patches"] = batch["patches"]
+        logits, cache = jax.jit(
+            lambda p, t, c, **kw: api.prefill(p, t, c, **kw))(
+                params, batch["tokens"][:, :S // 2], cache, **kw)
+        assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        logits2, cache = jax.jit(api.decode_step)(params, tok, cache)
+        assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+        print(f"{arch:24s} loss={float(loss):8.4f} "
+              f"decode_logits={tuple(logits2.shape)}  [{time.time()-t0:5.1f}s]")
+
+
+if __name__ == "__main__":
+    main()

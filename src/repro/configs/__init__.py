@@ -1,0 +1,4 @@
+from .base import InputShape, ModelConfig
+from .shapes import SHAPES, shapes_for, skip_reason
+
+__all__ = ["InputShape", "ModelConfig", "SHAPES", "shapes_for", "skip_reason"]

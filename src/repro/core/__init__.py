@@ -1,0 +1,26 @@
+"""repro.core — the paper's contribution, generalized to JAX pytrees.
+
+Deep-copy semantics (full/selective), the pointerchain directive
+(:mod:`chainref`), marshalling arenas (:mod:`arena`) and the three transfer
+schemes (:mod:`schemes`) that the benchmark suite compares.
+"""
+from .treepath import TreePath, leaf_paths, leaf_items, max_chain_depth
+from .chainref import (ChainRef, declare, extract, insert, region, chain_call,
+                       chain_jit)
+from .arena import (ArenaLayout, LeafSlot, plan, pack, unpack, repack_into,
+                    datasize_linear, datasize_dense)
+from .schemes import (TransferLedger, TransferScheme, UVMScheme, MarshalScheme,
+                      PointerChainScheme, SCHEMES, make_scheme)
+from .deepcopy import (full_deepcopy, selective_deepcopy, host_skeleton,
+                       tree_bytes)
+
+__all__ = [
+    "TreePath", "leaf_paths", "leaf_items", "max_chain_depth",
+    "ChainRef", "declare", "extract", "insert", "region", "chain_call",
+    "chain_jit",
+    "ArenaLayout", "LeafSlot", "plan", "pack", "unpack", "repack_into",
+    "datasize_linear", "datasize_dense",
+    "TransferLedger", "TransferScheme", "UVMScheme", "MarshalScheme",
+    "PointerChainScheme", "SCHEMES", "make_scheme",
+    "full_deepcopy", "selective_deepcopy", "host_skeleton", "tree_bytes",
+]

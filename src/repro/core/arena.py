@@ -1,0 +1,166 @@
+"""Arena — the paper's marshalling scheme (Algorithm 1) for pytrees.
+
+The paper pre-sizes the whole nested structure, serves every allocation from
+one contiguous heap buffer while recording a ``requestList`` of offsets,
+transfers the buffer to the device in ONE batch, then ``acc_attach``-es each
+interior pointer.  Here:
+
+  * ``plan()``       = determineTotalBytes + the requestList (an
+                       :class:`ArenaLayout`: per-leaf (bucket, offset, size)).
+  * ``pack()``       = serving the allocations: every leaf raveled into its
+                       dtype bucket's contiguous buffer.
+  * one device_put per bucket = the single-batch transfer.
+  * ``unpack()``     = acc_attach: rebuilding leaf *views* from offsets.
+                       On TPU this is metadata-only — slices/reshapes of the
+                       arena fuse away under jit; there is no pointer to fix.
+
+Buckets are per-dtype because a TPU buffer has one element type; the paper's
+single ``char*`` heap has no such constraint.  ``align_elems`` pads leaf
+offsets (default 1 = the paper's tight packing; the framework's gradient
+arenas use 512-byte alignment for DMA/collective efficiency).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """One entry of the requestList."""
+
+    bucket: str          # dtype name
+    offset: int          # elements into the bucket buffer
+    size: int            # number of elements
+    shape: Tuple[int, ...]
+    dtype: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaLayout:
+    treedef: Any
+    slots: Tuple[LeafSlot, ...]
+    bucket_sizes: Dict[str, int]      # elements per bucket
+    align_elems: int
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.slots)
+
+    def bucket_bytes(self) -> Dict[str, int]:
+        return {b: int(n) * np.dtype(b).itemsize for b, n in self.bucket_sizes.items()}
+
+    def total_bytes(self) -> int:
+        """determineTotalBytes(struct) — Alg. 1 line 2."""
+        return int(sum(self.bucket_bytes().values()))
+
+    def payload_bytes(self) -> int:
+        """Bytes of live leaf data (excludes alignment padding)."""
+        return int(sum(s.size * np.dtype(s.bucket).itemsize for s in self.slots))
+
+
+def _align(x: int, a: int) -> int:
+    return ((x + a - 1) // a) * a
+
+
+def plan(tree: Any, align_elems: int = 1) -> ArenaLayout:
+    """Walk the tree once, assign every leaf an offset in its dtype bucket."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    cursors: Dict[str, int] = {}
+    slots: List[LeafSlot] = []
+    for leaf in leaves:
+        arr = np.asarray(leaf) if not hasattr(leaf, "dtype") else leaf
+        dtype = np.dtype(arr.dtype)
+        bucket = dtype.name
+        off = _align(cursors.get(bucket, 0), align_elems)
+        size = int(np.prod(arr.shape)) if arr.shape else 1
+        slots.append(LeafSlot(bucket, off, size, tuple(arr.shape), dtype))
+        cursors[bucket] = off + size
+    return ArenaLayout(treedef, tuple(slots), dict(cursors), align_elems)
+
+
+Buffers = Dict[str, Any]
+
+
+def pack(tree: Any, layout: Optional[ArenaLayout] = None, align_elems: int = 1,
+         use_numpy: bool = False) -> Tuple[Buffers, ArenaLayout]:
+    """Marshal the tree into contiguous per-dtype buffers."""
+    if layout is None:
+        layout = plan(tree, align_elems)
+    leaves = jax.tree_util.tree_leaves(tree)
+    if len(leaves) != layout.num_leaves:
+        raise ValueError("tree does not match arena layout")
+    xp = np if use_numpy else jnp
+    pieces: Dict[str, List[Any]] = {b: [] for b in layout.bucket_sizes}
+    cursors: Dict[str, int] = {b: 0 for b in layout.bucket_sizes}
+    for leaf, slot in zip(leaves, layout.slots):
+        pad = slot.offset - cursors[slot.bucket]
+        if pad:
+            pieces[slot.bucket].append(xp.zeros((pad,), dtype=slot.dtype))
+        flat = xp.reshape(xp.asarray(leaf, dtype=slot.dtype), (-1,))
+        if flat.size == 0:
+            flat = xp.zeros((0,), dtype=slot.dtype)
+        pieces[slot.bucket].append(flat)
+        cursors[slot.bucket] = slot.offset + slot.size
+    buffers: Buffers = {}
+    for bucket, total in layout.bucket_sizes.items():
+        tail = total - cursors[bucket]
+        if tail:
+            pieces[bucket].append(xp.zeros((tail,), dtype=np.dtype(bucket)))
+        buffers[bucket] = (np.concatenate(pieces[bucket]) if use_numpy
+                           else jnp.concatenate(pieces[bucket])
+                           ) if pieces[bucket] else xp.zeros((0,), np.dtype(bucket))
+    return buffers, layout
+
+
+def unpack(buffers: Buffers, layout: ArenaLayout) -> Any:
+    """acc_attach — rebuild every leaf as a view of its bucket buffer."""
+    leaves = []
+    for slot in layout.slots:
+        buf = buffers[slot.bucket]
+        flat = jax.lax.dynamic_slice_in_dim(buf, slot.offset, slot.size, 0) \
+            if isinstance(buf, jax.Array) and not isinstance(buf, np.ndarray) \
+            else buf[slot.offset: slot.offset + slot.size]
+        leaves.append(jnp.reshape(flat, slot.shape) if not isinstance(buf, np.ndarray)
+                      else np.reshape(flat, slot.shape))
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+def repack_into(buffers: Buffers, layout: ArenaLayout, tree: Any) -> Buffers:
+    """Functionally update the arena from a (possibly modified) tree.
+
+    Equivalent to the demarshalling direction of Alg. 1 run in reverse: the
+    arena stays the single source of truth, the tree's leaves are scattered
+    back to their offsets.  Used by the gradient-arena update path.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    out = dict(buffers)
+    for leaf, slot in zip(leaves, layout.slots):
+        flat = jnp.reshape(jnp.asarray(leaf, dtype=slot.dtype), (-1,))
+        out[slot.bucket] = jax.lax.dynamic_update_slice_in_dim(
+            out[slot.bucket], flat, slot.offset, 0)
+    return out
+
+
+# -- data-size model (paper Eq. 1–3 hooks) -----------------------------------
+
+def datasize_linear(k: int, n: int, all_levels_init: bool = True,
+                    header_bytes: int = 24, elem_bytes: int = 8) -> int:
+    """Eq. 1 (allinit-*): 24k + 8nk.  Eq. 2 (LLinit): 24k + 8n."""
+    if all_levels_init:
+        return header_bytes * k + elem_bytes * n * k
+    return header_bytes * k + elem_bytes * n
+
+
+def datasize_dense(q: int, n: int, depth: int, header_bytes: int = 24,
+                   last_header_bytes: int = 12, elem_bytes: int = 8) -> int:
+    """Eq. 3, recursive: DataSize(q,n,D) = 24 + 8n + q*DataSize(q,n,D-1)."""
+    if depth == 0:
+        return last_header_bytes + elem_bytes * n
+    return (header_bytes + elem_bytes * n
+            + q * datasize_dense(q, n, depth - 1, header_bytes,
+                                 last_header_bytes, elem_bytes))

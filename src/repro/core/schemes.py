@@ -1,0 +1,225 @@
+"""Transfer schemes — the paper's three ways to deep-copy a nested tree.
+
+  * :class:`UVMScheme`          — demand-paged analogue: leaf-granular,
+                                  on-access transfers at arbitrary times.
+  * :class:`MarshalScheme`      — Algorithm 1: pack into contiguous arenas,
+                                  one DMA per dtype bucket, attach views.
+  * :class:`PointerChainScheme` — declared chains only (selective deep copy).
+
+Every scheme records its traffic in a :class:`TransferLedger` so tests and
+benchmarks can assert the paper's data-motion claims structurally (bytes
+moved, DMA count) in addition to timing them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import arena as arena_lib
+from .chainref import ChainRef, declare, extract, insert
+from .treepath import TreePath, leaf_items
+
+
+def _nbytes(x: Any) -> int:
+    arr = np.asarray(x) if not hasattr(x, "nbytes") else x
+    return int(arr.nbytes)
+
+
+@dataclasses.dataclass
+class TransferLedger:
+    """Counts H2D/D2H traffic: the paper's implicit metric made explicit."""
+
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    h2d_calls: int = 0   # DMA batches issued host->device
+    d2h_calls: int = 0
+    wall_s: float = 0.0
+
+    def record_h2d(self, nbytes: int) -> None:
+        self.h2d_bytes += int(nbytes)
+        self.h2d_calls += 1
+
+    def record_d2h(self, nbytes: int) -> None:
+        self.d2h_bytes += int(nbytes)
+        self.d2h_calls += 1
+
+    def reset(self) -> None:
+        self.h2d_bytes = self.d2h_bytes = 0
+        self.h2d_calls = self.d2h_calls = 0
+        self.wall_s = 0.0
+
+
+class TransferScheme:
+    """Protocol: move a nested state tree host<->device under a policy."""
+
+    name: str = "base"
+
+    def __init__(self, device: Optional[Any] = None):
+        self.device = device or jax.devices()[0]
+        self.ledger = TransferLedger()
+
+    # to_device returns a *device tree* whose accessed leaves live on device.
+    def to_device(self, tree: Any, paths: Optional[Sequence[Union[str, TreePath]]] = None) -> Any:
+        raise NotImplementedError
+
+    def from_device(self, device_tree: Any, host_tree: Any,
+                    paths: Optional[Sequence[Union[str, TreePath]]] = None) -> Any:
+        raise NotImplementedError
+
+    def _put(self, x: Any) -> Any:
+        t0 = time.perf_counter()
+        y = jax.device_put(x, self.device)
+        y.block_until_ready()
+        self.ledger.wall_s += time.perf_counter() - t0
+        self.ledger.record_h2d(_nbytes(x))
+        return y
+
+    def _get(self, x: Any) -> Any:
+        t0 = time.perf_counter()
+        y = np.asarray(jax.device_get(x))
+        self.ledger.wall_s += time.perf_counter() - t0
+        self.ledger.record_d2h(_nbytes(y))
+        return y
+
+
+# ---------------------------------------------------------------------------
+# UVM — demand paging, simulated at leaf granularity
+# ---------------------------------------------------------------------------
+
+class LazyLeaf:
+    """A leaf that is faulted to the device on first access (a page fault)."""
+
+    __slots__ = ("_host", "_dev", "_scheme")
+
+    def __init__(self, host_value: Any, scheme: "UVMScheme"):
+        self._host = host_value
+        self._dev: Optional[Any] = None
+        self._scheme = scheme
+
+    def get(self) -> Any:
+        if self._dev is None:
+            self._dev = self._scheme._put(self._host)
+        return self._dev
+
+
+class UVMScheme(TransferScheme):
+    """Closest TPU analogue of CUDA UVM (see DESIGN.md §2.1).
+
+    Every leaf is its own transfer granule, issued lazily at first access —
+    zero developer effort, arbitrary transfer times, no batching.  TPUs have
+    no page-faulting unified memory, so the *behavioural* contract is
+    simulated: ``to_device`` wraps leaves in :class:`LazyLeaf`;
+    ``materialize`` (a kernel touching the tree) triggers the faults.
+    """
+
+    name = "uvm"
+
+    def to_device(self, tree, paths=None):
+        return jax.tree_util.tree_map(lambda leaf: LazyLeaf(leaf, self), tree)
+
+    def materialize(self, lazy_tree: Any,
+                    paths: Optional[Sequence[Union[str, TreePath]]] = None) -> Any:
+        """Touch leaves (all, or the chains a kernel dereferences)."""
+        if paths is None:
+            return jax.tree_util.tree_map(
+                lambda l: l.get() if isinstance(l, LazyLeaf) else l, lazy_tree,
+                is_leaf=lambda l: isinstance(l, LazyLeaf))
+        out = lazy_tree
+        for p in paths:
+            tp = TreePath.parse(p)
+            node = tp.resolve(lazy_tree)
+            node = jax.tree_util.tree_map(
+                lambda l: l.get() if isinstance(l, LazyLeaf) else l, node,
+                is_leaf=lambda l: isinstance(l, LazyLeaf))
+            out = tp.set(out, node)
+        return out
+
+    def from_device(self, device_tree, host_tree, paths=None):
+        # demand paging back: every device leaf is fetched individually
+        def fetch(l):
+            if isinstance(l, LazyLeaf):
+                return l._host if l._dev is None else self._get(l._dev)
+            return self._get(l) if isinstance(l, jax.Array) else l
+        return jax.tree_util.tree_map(
+            fetch, device_tree, is_leaf=lambda l: isinstance(l, LazyLeaf))
+
+
+# ---------------------------------------------------------------------------
+# Marshalling — Algorithm 1
+# ---------------------------------------------------------------------------
+
+class MarshalScheme(TransferScheme):
+    name = "marshal"
+
+    def __init__(self, device: Optional[Any] = None, align_elems: int = 1):
+        super().__init__(device)
+        self.align_elems = align_elems
+        self.layout: Optional[arena_lib.ArenaLayout] = None
+
+    def to_device(self, tree, paths=None):
+        # 1) determineTotalBytes + requestList; 2) pack on host; 3) ONE
+        # transfer per dtype bucket; 4) attach = views over device buffers.
+        buffers, layout = arena_lib.pack(tree, align_elems=self.align_elems,
+                                         use_numpy=True)
+        self.layout = layout
+        dev_buffers = {b: self._put(buf) for b, buf in buffers.items()}
+        return arena_lib.unpack(dev_buffers, layout)
+
+    def from_device(self, device_tree, host_tree, paths=None):
+        # demarshal: repack on device (fused under jit), one D2H per bucket
+        buffers, layout = arena_lib.pack(device_tree, layout=self.layout)
+        host_buffers = {b: self._get(buf) for b, buf in buffers.items()}
+        return arena_lib.unpack(host_buffers, layout)
+
+
+# ---------------------------------------------------------------------------
+# pointerchain — selective deep copy of declared chains
+# ---------------------------------------------------------------------------
+
+class PointerChainScheme(TransferScheme):
+    name = "pointerchain"
+
+    def __init__(self, device: Optional[Any] = None):
+        super().__init__(device)
+        self.refs: tuple[ChainRef, ...] = ()
+
+    def to_device(self, tree, paths=None):
+        """Extract effective leaves for the declared chains; move ONLY them.
+
+        Returns the tree with declared leaves resident on device and all
+        interior/undeclared state left on the host — the kernel is handed
+        the extracted leaves, never the containers (paper §3).
+        """
+        if paths is None:
+            paths = [str(p) for p, _ in leaf_items(tree)]
+        self.refs = declare(tree, *paths)
+        leaves = extract(tree, self.refs)
+        dev_leaves = [self._put(l) for l in leaves]
+        return insert(tree, self.refs, dev_leaves)
+
+    def extract_leaves(self, tree: Any) -> list[Any]:
+        return extract(tree, self.refs)
+
+    def from_device(self, device_tree, host_tree, paths=None):
+        leaves = extract(device_tree, self.refs)
+        host_leaves = [self._get(l) for l in leaves]
+        return insert(host_tree, self.refs, host_leaves)
+
+
+SCHEMES: dict[str, Callable[..., TransferScheme]] = {
+    "uvm": UVMScheme,
+    "marshal": MarshalScheme,
+    "pointerchain": PointerChainScheme,
+}
+
+
+def make_scheme(name: str, **kw) -> TransferScheme:
+    try:
+        return SCHEMES[name](**kw)
+    except KeyError:
+        raise KeyError(f"unknown transfer scheme {name!r}; options: {sorted(SCHEMES)}")

@@ -1,0 +1,178 @@
+"""TreePath — the pytree analogue of a C pointer chain.
+
+The paper's Figure 1 chain ``simulation->atoms->traits->positions`` becomes a
+path through a nested pytree: ``("simulation", "atoms", "traits",
+"positions")``.  A :class:`TreePath` parses the familiar dotted/indexed
+syntax (``"a.b[3].c"``), resolves against a tree (the *dereference* walk),
+and performs functional (immutable) updates along the path.
+
+This module is pure Python + jax.tree_util; it never touches device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Iterator, Sequence, Tuple, Union
+
+import jax
+
+Step = Union[str, int]
+
+_STEP_RE = re.compile(r"([^.\[\]]+)|\[(-?\d+)\]")
+
+
+def _parse(path: str) -> Tuple[Step, ...]:
+    steps: list[Step] = []
+    for name, idx in _STEP_RE.findall(path):
+        if name:
+            steps.append(name)
+        else:
+            steps.append(int(idx))
+    if not steps:
+        raise ValueError(f"empty tree path: {path!r}")
+    return tuple(steps)
+
+
+@dataclasses.dataclass(frozen=True)
+class TreePath:
+    """A chain of container accesses leading to a pytree node.
+
+    ``TreePath.parse("params.layers[3].attn.wq")`` mirrors the paper's
+    pointer chain; :meth:`resolve` is the dereference loop, :meth:`set`
+    rebuilds the spine immutably (there are no pointers to patch in JAX —
+    see DESIGN.md §2.1).
+    """
+
+    steps: Tuple[Step, ...]
+
+    # -- construction ------------------------------------------------------
+    @staticmethod
+    def parse(path: Union[str, "TreePath", Sequence[Step]]) -> "TreePath":
+        if isinstance(path, TreePath):
+            return path
+        if isinstance(path, str):
+            return TreePath(_parse(path))
+        return TreePath(tuple(path))
+
+    def child(self, step: Step) -> "TreePath":
+        return TreePath(self.steps + (step,))
+
+    @property
+    def parent(self) -> "TreePath":
+        return TreePath(self.steps[:-1])
+
+    @property
+    def depth(self) -> int:
+        """Chain length — the paper's ``k`` (number of dereferences)."""
+        return len(self.steps)
+
+    # -- dereference -------------------------------------------------------
+    def resolve(self, tree: Any) -> Any:
+        """Walk the chain and return the node it points at."""
+        node = tree
+        for step in self.steps:
+            node = _step_into(node, step, self)
+        return node
+
+    def exists(self, tree: Any) -> bool:
+        try:
+            self.resolve(tree)
+            return True
+        except (KeyError, IndexError, AttributeError, TypeError):
+            return False
+
+    # -- functional update -------------------------------------------------
+    def set(self, tree: Any, value: Any) -> Any:
+        """Return a copy of ``tree`` with the pointed-at node replaced."""
+        return _set(tree, self.steps, value, self)
+
+    def update(self, tree: Any, fn) -> Any:
+        return self.set(tree, fn(self.resolve(tree)))
+
+    # -- misc ---------------------------------------------------------------
+    def __str__(self) -> str:
+        out: list[str] = []
+        for step in self.steps:
+            if isinstance(step, int):
+                out.append(f"[{step}]")
+            else:
+                out.append(("." if out else "") + step)
+        return "".join(out)
+
+    def __iter__(self) -> Iterator[Step]:
+        return iter(self.steps)
+
+
+def _step_into(node: Any, step: Step, path: "TreePath") -> Any:
+    if isinstance(step, int):
+        if isinstance(node, (list, tuple)):
+            return node[step]
+        # dict with int keys
+        if isinstance(node, dict):
+            return node[step]
+        raise TypeError(f"cannot index {type(node).__name__} with [{step}] in {path}")
+    if isinstance(node, dict):
+        if step in node:
+            return node[step]
+        raise KeyError(f"key {step!r} not found while resolving {path}")
+    if dataclasses.is_dataclass(node) or hasattr(node, step):
+        return getattr(node, step)
+    raise TypeError(f"cannot access field {step!r} on {type(node).__name__} in {path}")
+
+
+def _set(node: Any, steps: Tuple[Step, ...], value: Any, path: "TreePath") -> Any:
+    if not steps:
+        return value
+    step, rest = steps[0], steps[1:]
+    child = _step_into(node, step, path)
+    new_child = _set(child, rest, value, path)
+    if isinstance(node, dict):
+        out = dict(node)
+        out[step] = new_child
+        return out
+    if isinstance(node, list):
+        out_l = list(node)
+        out_l[step] = new_child  # type: ignore[index]
+        return out_l
+    if isinstance(node, tuple):
+        out_t = list(node)
+        out_t[step] = new_child  # type: ignore[index]
+        return tuple(out_t)
+    if dataclasses.is_dataclass(node):
+        return dataclasses.replace(node, **{str(step): new_child})
+    raise TypeError(f"cannot functionally update {type(node).__name__} in {path}")
+
+
+# -- enumeration -----------------------------------------------------------
+
+def _keypath_to_steps(kp) -> Tuple[Step, ...]:
+    steps: list[Step] = []
+    for entry in kp:
+        if isinstance(entry, jax.tree_util.DictKey):
+            steps.append(entry.key)
+        elif isinstance(entry, jax.tree_util.SequenceKey):
+            steps.append(entry.idx)
+        elif isinstance(entry, jax.tree_util.GetAttrKey):
+            steps.append(entry.name)
+        elif isinstance(entry, jax.tree_util.FlattenedIndexKey):
+            steps.append(entry.key)
+        else:  # pragma: no cover - future key types
+            steps.append(str(entry))
+    return tuple(steps)
+
+
+def leaf_paths(tree: Any) -> list[TreePath]:
+    """All pointer chains ending at a leaf array of ``tree``."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [TreePath(_keypath_to_steps(kp)) for kp, _ in leaves]
+
+
+def leaf_items(tree: Any) -> list[tuple[TreePath, Any]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(TreePath(_keypath_to_steps(kp)), leaf) for kp, leaf in leaves]
+
+
+def max_chain_depth(tree: Any) -> int:
+    """The paper's ``k`` for an arbitrary state tree."""
+    paths = leaf_paths(tree)
+    return max((p.depth for p in paths), default=0)

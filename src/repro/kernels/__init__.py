@@ -1,0 +1,3 @@
+"""Pallas TPU kernels. Each subpackage: kernel.py (pl.pallas_call +
+BlockSpec), ops.py (jit wrapper), ref.py (pure-jnp oracle).  Validated on
+CPU with interpret=True; the dry-run exercises the XLA path structurally."""

@@ -1,0 +1,107 @@
+"""Flash-decoding: one query token vs. a long KV cache, blocked over KV.
+
+Grid (B, H, nk) with the KV dimension innermost/sequential; the per-(b,h)
+online-softmax state lives in VMEM scratch.  Per-sequence valid lengths are
+scalar-prefetched (SMEM) so fully-invalid KV blocks still DMA but contribute
+nothing — on real hardware the obvious next step (skipping their DMAs via
+input_output_aliasing of the grid) is noted in EXPERIMENTS.md §Perf.
+
+The query block is a (8, hd) tile with only row 0 live: TPU sublanes want
+8-row tiles, so we pay one wasted sublane-tile rather than a layout change.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+QROWS = 8  # sublane tile; row 0 carries the real query
+
+
+def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   scale: float, block_k: int, nk: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # (QROWS, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                     # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (QROWS, block_k), 1)
+    s = jnp.where(k_pos < valid_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0, 0, :, :] = (acc_ref[...]
+                             / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                             ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid_len: jax.Array, *, scale: float | None = None,
+                     block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k/v: (B, KV, S, hd); valid_len: (B,) -> (B, H, hd)."""
+    B, H, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = scale if scale is not None else float(1.0 / (hd ** 0.5))
+    block_k = min(block_k, S)
+    nk = -(-S // block_k)
+    pad = nk * block_k - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    qt = jnp.zeros((B, H, QROWS, hd), q.dtype).at[:, :, 0, :].set(q)
+
+    grid = (B, H, nk)
+    kernel = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=block_k, nk=nk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, QROWS, hd), lambda b, h, ki, v_: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, hd),
+                             lambda b, h, ki, v_, g=g: (b, h // g, ki, 0)),
+                pl.BlockSpec((1, 1, block_k, hd),
+                             lambda b, h, ki, v_, g=g: (b, h // g, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, QROWS, hd),
+                                   lambda b, h, ki, v_: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((QROWS,), jnp.float32),
+                pltpu.VMEM((QROWS,), jnp.float32),
+                pltpu.VMEM((QROWS, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, QROWS, hd), q.dtype),
+        interpret=interpret,
+    )
+    out = kernel(valid_len.astype(jnp.int32), qt, k, v)
+    return out[:, :, 0, :]

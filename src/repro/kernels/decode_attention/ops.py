@@ -1,0 +1,20 @@
+"""jit wrapper matching the model's decode layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_k"))
+def decode_mha(q, k_cache, v_cache, valid_len, *, interpret=False,
+               block_k=512):
+    """q: (B,1,H,hd); caches: (B,S,KV,hd); valid_len: (B,) -> (B,1,H,hd)."""
+    out = decode_attention(q[:, 0],
+                           k_cache.transpose(0, 2, 1, 3),
+                           v_cache.transpose(0, 2, 1, 3),
+                           valid_len, interpret=interpret, block_k=block_k)
+    return out[:, None]

@@ -1,0 +1,21 @@
+"""Oracle: single-token GQA attention against a KV cache with valid lengths."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_ref(q, k, v, valid_len, *, scale=None):
+    """q: (B,H,hd), k/v: (B,KV,S,hd), valid_len: (B,) -> (B,H,hd)."""
+    B, H, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    kk = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kk) * scale
+    mask = jnp.arange(S)[None, None, :] < valid_len[:, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    return jnp.einsum("bhk,bhkd->bhd", p, vv).astype(q.dtype)

@@ -1,0 +1,108 @@
+"""Blocked causal GQA flash attention (forward) — TPU Pallas.
+
+Grid (B, H, nq, nk); the innermost k dimension is sequential on TPU, so the
+online-softmax running max/sum/accumulator live in VMEM scratch across k
+steps.  GQA is free: the K/V BlockSpec index_map divides the query head by
+the group size, so shared KV heads are DMA'd once per group — no
+jnp.repeat materialization (HBM traffic / g lower than the naive path).
+MXU alignment: block_q x head_dim and block_k x head_dim tiles, 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  nk: int, kv_len: int):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)             # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)             # (bk, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    valid = k_pos < kv_len                      # mask zero-padded keys
+    if causal:
+        qi = pl.program_id(2)
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                        (block_q, block_k), 0)
+        valid = valid & (k_pos <= q_pos)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0, 0, :, :] = (acc_ref[...]
+                             / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                             ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
+                                             "block_k", "interpret", "kv_len"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False,
+                    kv_len: int | None = None) -> jax.Array:
+    """q: (B, H, Sq, hd), k/v: (B, KV, Sk, hd) with H % KV == 0."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = scale if scale is not None else float(1.0 / (hd ** 0.5))
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq = Sq // block_q
+    nk = Sk // block_k
+    assert nq * block_q == Sq and nk * block_k == Sk, "pad seq to block size"
+
+    grid = (B, H, nq, nk)
+    kernel = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          block_q=block_q, block_k=block_k, nk=nk,
+                          kv_len=kv_len if kv_len is not None else Sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki, g=g: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki, g=g: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    return kernel(q, k, v)

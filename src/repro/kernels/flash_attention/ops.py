@@ -1,0 +1,32 @@
+"""jit wrapper matching the model's (B, S, H, hd) layout + padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret", "block_q",
+                                             "block_k"))
+def mha(q, k, v, *, causal=True, interpret=False, block_q=128, block_k=128):
+    """Model layout adapter: q (B,S,H,hd), k/v (B,S,KV,hd) -> (B,S,H,hd)."""
+    qT = q.transpose(0, 2, 1, 3)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    Sq, Sk = qT.shape[2], kT.shape[2]
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    if pad_q:
+        qT = jnp.pad(qT, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kT = jnp.pad(kT, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vT = jnp.pad(vT, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention(qT, kT, vT, causal=causal, block_q=bq, block_k=bk,
+                          interpret=interpret, kv_len=Sk)
+    if pad_q:
+        out = out[:, :, :Sq]
+    return out.transpose(0, 2, 1, 3)

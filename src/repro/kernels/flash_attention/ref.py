@@ -1,0 +1,23 @@
+"""Oracle: plain GQA softmax attention (f32 throughout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, scale=None, q_offset=0):
+    """q: (B,H,Sq,hd), k/v: (B,KV,Sk,hd) -> (B,H,Sq,hd)."""
+    B, H, Sq, hd = q.shape
+    KV = k.shape[1]
+    g = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    kk = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk) * scale
+    if causal:
+        q_pos = jnp.arange(Sq)[:, None] + q_offset
+        k_pos = jnp.arange(k.shape[2])[None, :]
+        s = jnp.where(k_pos <= q_pos, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv).astype(q.dtype)

@@ -1,0 +1,87 @@
+"""jit'd wrappers: arena pack/unpack for pytrees via the gather kernel.
+
+Bridges ``repro.core.arena`` layouts to the tile-map representation: leaves
+are padded to TILE elements, the map is built once per layout (host side,
+cached), then pack/unpack are single kernel launches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernel as K
+from . import ref
+
+TILE = K.SUBLANE * K.LANE  # 1024 elements
+
+
+def _pad_len(n: int) -> int:
+    return -(-n // TILE) * TILE
+
+
+def build_tile_maps(shapes) -> Tuple[np.ndarray, np.ndarray, int]:
+    """For a list of leaf shapes: (pack_map, unpack_map, n_tiles).
+
+    Source pool layout: leaves concatenated, each padded to a TILE multiple.
+    Packed layout: the same tiles, contiguous (= the arena).  pack_map[i]
+    gives the source tile of packed tile i; unpack_map is the inverse.
+    """
+    sizes = [int(np.prod(s)) for s in shapes]
+    n_tiles = sum(_pad_len(s) // TILE for s in sizes)
+    pack_map = np.arange(n_tiles, dtype=np.int32)  # identity: pool is ordered
+    unpack_map = np.argsort(pack_map).astype(np.int32)
+    return pack_map, unpack_map, n_tiles
+
+
+def flatten_to_pool(leaves, dtype) -> jax.Array:
+    """Concatenate leaves (padded per-leaf to TILE) into the source pool."""
+    parts = []
+    for leaf in leaves:
+        flat = jnp.ravel(leaf).astype(dtype)
+        pad = _pad_len(flat.size) - flat.size
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        parts.append(flat)
+    return jnp.concatenate(parts) if parts else jnp.zeros((0,), dtype)
+
+
+def pool_to_leaves(pool: jax.Array, shapes, dtype):
+    out = []
+    off = 0
+    for s in shapes:
+        n = int(np.prod(s))
+        out.append(pool[off: off + n].reshape(s).astype(dtype))
+        off += _pad_len(n)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pack_pool(pool: jax.Array, tile_map: jax.Array, interpret: bool = False
+              ) -> jax.Array:
+    """One kernel launch: gather source tiles into the packed arena."""
+    mat = pool.reshape(-1, K.LANE)
+    out = K.gather_tiles(mat, tile_map, interpret=interpret)
+    return out.reshape(-1)
+
+
+def pack_tree(tree: Any, *, interpret: bool = True) -> Tuple[jax.Array, Any]:
+    """Marshal a (single-dtype) pytree into one contiguous buffer."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    dtype = leaves[0].dtype
+    shapes = [l.shape for l in leaves]
+    pack_map, unpack_map, _ = build_tile_maps(shapes)
+    pool = flatten_to_pool(leaves, dtype)
+    packed = pack_pool(pool, jnp.asarray(pack_map), interpret=interpret)
+    meta = {"treedef": treedef, "shapes": shapes, "dtype": dtype,
+            "unpack_map": jnp.asarray(unpack_map)}
+    return packed, meta
+
+
+def unpack_tree(packed: jax.Array, meta) -> Any:
+    pool = pack_pool(packed, meta["unpack_map"], interpret=True)
+    leaves = pool_to_leaves(pool, meta["shapes"], meta["dtype"])
+    return jax.tree_util.tree_unflatten(meta["treedef"], leaves)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the marshal_pack kernel.
+
+The kernel's contract: given a flat source pool and a per-tile source-index
+map, produce the packed destination ``dst[i*T:(i+1)*T] = src[map[i]*T : ...]``
+(and the inverse for unpack).  This is Algorithm 1's single-buffer copy as a
+TPU gather over aligned tiles.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_ref(src: jnp.ndarray, tile_map: jnp.ndarray, tile: int) -> jnp.ndarray:
+    """src: (n_src_tiles*tile,), tile_map: (n_dst_tiles,) int32."""
+    blocks = src.reshape(-1, tile)
+    return blocks[tile_map].reshape(-1)
+
+
+def unpack_ref(dst: jnp.ndarray, tile_map: jnp.ndarray, tile: int,
+               n_src_tiles: int) -> jnp.ndarray:
+    """Scatter packed tiles back to their source positions."""
+    out = jnp.zeros((n_src_tiles, tile), dst.dtype)
+    out = out.at[tile_map].set(dst.reshape(-1, tile))
+    return out.reshape(-1)

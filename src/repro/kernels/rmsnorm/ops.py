@@ -1,0 +1,3 @@
+from .kernel import rmsnorm
+
+__all__ = ["rmsnorm"]

@@ -1,0 +1,10 @@
+"""Oracle: RMSNorm over the last dim (f32 accumulation)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * (ms + eps) ** -0.5 * scale.astype(jnp.float32)).astype(x.dtype)

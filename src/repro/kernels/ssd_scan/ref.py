@@ -1,0 +1,21 @@
+"""Oracle for the SSD chunk kernel: per-(batch, chunk, head) intra-chunk
+outputs + chunk summary state, in plain jnp (mirrors models/ssm math)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, dt, dtA, Bm, Cm):
+    """x: (Q, hd), dt/dtA: (Q,), Bm/Cm: (Q, N).
+    Returns (y_diag (Q, hd), chunk_state (hd, N), cum (Q,))."""
+    cum = jnp.cumsum(dtA)
+    seg = cum[:, None] - cum[None, :]
+    Q = x.shape[0]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask, jnp.exp(seg), 0.0)
+    scores = (Cm.astype(jnp.float32) @ Bm.astype(jnp.float32).T)
+    dtx = x.astype(jnp.float32) * dt[:, None]
+    y_diag = (scores * L) @ dtx
+    decay = jnp.exp(cum[-1] - cum)
+    state = dtx.T @ (Bm.astype(jnp.float32) * decay[:, None])   # (hd, N)
+    return y_diag, state, cum

@@ -1,0 +1,8 @@
+"""Launch layer: mesh construction, dry-run, drivers.
+
+NOTE: ``repro.launch.dryrun`` must only be imported as a process entry point
+(it sets XLA_FLAGS before importing jax).  Import mesh/hlo_analysis freely.
+"""
+from . import hlo_analysis, mesh
+
+__all__ = ["hlo_analysis", "mesh"]

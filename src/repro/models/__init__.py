@@ -1,0 +1,5 @@
+from . import layers, lm, encdec, moe, ssm, specs, pspec
+from .registry import ARCH_IDS, ModelApi, get, get_model, load_config
+
+__all__ = ["layers", "lm", "encdec", "moe", "ssm", "specs", "pspec",
+           "ARCH_IDS", "ModelApi", "get", "get_model", "load_config"]

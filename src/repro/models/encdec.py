@@ -1,0 +1,176 @@
+"""Encoder–decoder LM (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: ``input_specs()`` supplies
+precomputed frame embeddings (B, S_src, d_model); the encoder is a
+bidirectional transformer over frames, the decoder a causal transformer with
+cross-attention.  Decode shapes apply to the decoder (this is enc-dec, not
+encoder-only; see DESIGN.md §4.2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .lm import _remat, _layer_cache
+from .pspec import constrain
+from .specs import init_params, abstract_params, param_axes, is_spec, ParamSpec
+from ..configs.base import ModelConfig
+
+
+def _stack(tree, n):
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init,
+                            s.scale, s.dtype), tree, is_leaf=is_spec)
+
+
+def spec_tree(cfg: ModelConfig) -> Dict[str, Any]:
+    enc_block = {"ln1": L.norm_specs(cfg), "attn": L.attention_specs(cfg),
+                 "ln2": L.norm_specs(cfg), "mlp": L.mlp_specs(cfg)}
+    dec_block = {"ln1": L.norm_specs(cfg), "attn": L.attention_specs(cfg),
+                 "lnx": L.norm_specs(cfg), "xattn": L.attention_specs(cfg, cross=True),
+                 "ln2": L.norm_specs(cfg), "mlp": L.mlp_specs(cfg)}
+    return {
+        "embed": L.embed_specs(cfg),
+        "enc_blocks": _stack(enc_block, cfg.enc_layers),
+        "dec_blocks": _stack(dec_block, cfg.num_layers),
+        "enc_norm": L.norm_specs(cfg),
+        "final_norm": L.norm_specs(cfg),
+    }
+
+
+def init(cfg, key):
+    return init_params(spec_tree(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+def abstract(cfg):
+    return abstract_params(spec_tree(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def axes(cfg):
+    return param_axes(spec_tree(cfg))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, abstract_only=False):
+    kv_dtype = jnp.dtype(cfg.compute_dtype)
+    mk = (jax.ShapeDtypeStruct if abstract_only
+          else lambda sh, dt: jnp.zeros(sh, dt))
+    kvhd = (cfg.num_kv_heads, cfg.resolved_head_dim)
+    src = max(1, max_seq // cfg.src_ratio)
+    return {
+        "pos": mk((batch,), jnp.int32),
+        "k": mk((cfg.num_layers, batch, max_seq) + kvhd, kv_dtype),
+        "v": mk((cfg.num_layers, batch, max_seq) + kvhd, kv_dtype),
+        # encoder memory, filled at prefill, read by cross-attention
+        "enc_out": mk((batch, src, cfg.d_model), kv_dtype),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_src, d_model) precomputed frontend embeddings."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, p):
+        def blk(p, x):
+            h = L.apply_norm(cfg, p["ln1"], x)
+            out, _ = L.multihead_attention(cfg, p["attn"], h,
+                                           positions=positions, causal=False)
+            x = x + out
+            h = L.apply_norm(cfg, p["ln2"], x)
+            return x + L.apply_mlp(cfg, p["mlp"], h)
+        return _remat(cfg, blk)(p, x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def _decode_stack(cfg, params, x, enc_out, *, positions, cache, kv_valid_len):
+    layer_cache = _layer_cache(cache, ("k", "v"))
+
+    def blk(p, x, c):
+        h = L.apply_norm(cfg, p["ln1"], x)
+        out, new_c = L.multihead_attention(cfg, p["attn"], h,
+                                           positions=positions, kv_cache=c,
+                                           kv_valid_len=kv_valid_len)
+        x = x + out
+        h = L.apply_norm(cfg, p["lnx"], x)
+        out, _ = L.multihead_attention(cfg, p["xattn"], h, positions=positions,
+                                       kv_x=enc_out)
+        x = x + out
+        h = L.apply_norm(cfg, p["ln2"], x)
+        x = x + L.apply_mlp(cfg, p["mlp"], h)
+        return x, new_c
+
+    if layer_cache is None:
+        def body(x, p):
+            x, _ = _remat(cfg, functools.partial(blk))(p, x, None)
+            return x, None
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+        return x, None
+
+    def body(x, xs):
+        p, c = xs
+        x, new_c = _remat(cfg, blk)(p, x, c)
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], layer_cache))
+    return x, new_cache
+
+
+def loss_fn(cfg: ModelConfig, params, batch, rng=None):
+    """batch: {"frames": (B,S_src,D), "tokens": (B,S), "labels": (B,S)}."""
+    enc_out = encode(cfg, params, batch["frames"])
+    x = L.embed_tokens(cfg, params["embed"], batch["tokens"])
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, _ = _decode_stack(cfg, params, x, enc_out, positions=positions,
+                         cache=None, kv_valid_len=None)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)
+    logits = constrain(logits, "batch", None, "vocab")
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "aux_loss": jnp.zeros(()),
+                  "tokens": jnp.sum(mask)}
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, *, frames=None):
+    """Encode frames and prefill the decoder self-attention cache."""
+    B, S = tokens.shape
+    enc_out = (encode(cfg, params, frames) if frames is not None
+               else cache["enc_out"])
+    positions = jnp.arange(S)[None, :] + cache["pos"][:, None]
+    valid = cache["pos"] + S
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    x, new_core = _decode_stack(cfg, params, x, enc_out, positions=positions,
+                                cache=cache, kv_valid_len=valid)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x[:, -1:])
+    new_cache = dict(new_core or {})
+    new_cache["pos"] = valid
+    new_cache["enc_out"] = enc_out.astype(cache["enc_out"].dtype)
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache):
+    B, S = tokens.shape
+    positions = cache["pos"][:, None]
+    valid = cache["pos"] + 1
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    x, new_core = _decode_stack(cfg, params, x, cache["enc_out"],
+                                positions=positions, cache=cache,
+                                kv_valid_len=valid)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)
+    new_cache = dict(new_core or {})
+    new_cache["pos"] = valid
+    new_cache["enc_out"] = cache["enc_out"]
+    return logits, new_cache

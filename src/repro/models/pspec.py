@@ -1,0 +1,64 @@
+"""Logical-axis sharding constraints, activated only under a mesh context.
+
+Model code calls ``constrain(x, "batch", None, "vocab")`` with *logical*
+names; outside a mesh activation this is the identity, so smoke tests and
+CPU benchmarks never touch device state.  ``repro.launch`` activates the
+mesh + rule table while tracing/lowering.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+_tls = threading.local()
+
+
+def _normalize(entry):
+    if entry is None or entry == ():
+        return None
+    if isinstance(entry, (list, tuple)):
+        return tuple(entry) if len(entry) > 1 else entry[0]
+    return entry
+
+
+@contextlib.contextmanager
+def activate(mesh, rules: dict):
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = {"mesh": mesh, "rules": dict(rules)}
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def active_rules() -> Optional[dict]:
+    ctx = getattr(_tls, "ctx", None)
+    return ctx["rules"] if ctx else None
+
+
+def logical_to_spec(axes, rules: dict) -> PartitionSpec:
+    entries = []
+    used = set()
+    for name in axes:
+        e = _normalize(rules.get(name)) if name is not None else None
+        # one mesh axis may shard at most one tensor dim
+        flat = e if isinstance(e, tuple) else ((e,) if e else ())
+        if any(m in used for m in flat):
+            e = None
+        else:
+            used.update(flat)
+        entries.append(e)
+    return PartitionSpec(*entries)
+
+
+def constrain(x: Any, *axes) -> Any:
+    ctx = getattr(_tls, "ctx", None)
+    if ctx is None:
+        return x
+    spec = logical_to_spec(axes, ctx["rules"])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx["mesh"], spec))

@@ -1,0 +1,69 @@
+"""Parameter specs: one declaration site for shape + logical axes + init.
+
+Models build a tree of :class:`ParamSpec`; from it we derive
+  * ``init_params``     — materialized weights (smoke tests, examples),
+  * ``abstract_params`` — ShapeDtypeStructs (dry-run; no allocation),
+  * ``param_axes``      — logical-axis tree for the sharding rules.
+
+Logical axis vocabulary (mapped to mesh axes by ``repro.launch.mesh`` rules):
+  layers, embed, vocab, heads, kv_heads, head_dim, mlp,
+  expert, expert_mlp, ssm_inner, ssm_state, conv, frame, null
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"     # normal | zeros | ones
+    scale: Optional[float] = None   # default: 1/sqrt(fan_in)
+    dtype: Any = None        # None -> model param_dtype
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"spec rank mismatch: {self.shape} vs {self.axes}")
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _materialize(spec: ParamSpec, key, param_dtype) -> jax.Array:
+    dtype = spec.dtype or param_dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else max(1, spec.shape[-1])
+    scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(spec_tree: Any, key, param_dtype=jnp.float32) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    vals = [_materialize(s, k, param_dtype) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(spec_tree: Any, param_dtype=jnp.float32) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or param_dtype),
+        spec_tree, is_leaf=is_spec)
+
+
+def param_axes(spec_tree: Any) -> Any:
+    return jax.tree_util.tree_map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def param_count(spec_tree: Any) -> int:
+    return int(sum(np.prod(s.shape) for s in
+                   jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec)))

@@ -1,0 +1,202 @@
+"""Mamba2 — SSD (state-space duality) blocks, chunked scan + decode step.
+
+Train/prefill uses the chunked SSD algorithm (arXiv:2405.21060): quadratic
+attention-like term inside chunks of Q tokens, linear state recurrence
+across chunks.  Decode keeps an O(1) recurrent state per layer — this is why
+mamba2/zamba2 are the two architectures that run the long_500k shape.
+
+Simplifications vs. the reference implementation (documented in DESIGN.md):
+single B/C group (ngroups=1); the depthwise causal conv is applied to the
+x-branch only.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .specs import ParamSpec
+from ..configs.base import ModelConfig
+
+
+def ssm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh, w = cfg.ssm_heads, cfg.ssm_conv_width
+    return {
+        "wz": ParamSpec((d, di), ("embed", "ssm_inner")),
+        "wx": ParamSpec((d, di), ("embed", "ssm_inner")),
+        "wB": ParamSpec((d, n), ("embed", "ssm_state")),
+        "wC": ParamSpec((d, n), ("embed", "ssm_state")),
+        "wdt": ParamSpec((d, nh), ("embed", "ssm_heads")),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "A_log": ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "D": ParamSpec((nh,), ("ssm_heads",), init="ones"),
+        "conv_w": ParamSpec((w, di), ("conv", "ssm_inner"), scale=0.5),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), init="zeros"),
+        "out_norm": ParamSpec((di,), ("ssm_inner",), init="ones"),
+        "wo": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k]."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 cache: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Depthwise causal conv. x: (B,S,di), w: (W,di). cache: (B,W-1,di)."""
+    W = w.shape[0]
+    if cache is not None:
+        ext = jnp.concatenate([cache.astype(x.dtype), x], axis=1)  # (B,W-1+S,di)
+        new_cache = ext[:, -(W - 1):]
+    else:
+        ext = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+        new_cache = None
+    S = x.shape[1]
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + ext[:, i:i + S] * w[i].astype(x.dtype)
+    out = out + b.astype(x.dtype)
+    return jax.nn.silu(out), new_cache
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:  (B, S, nh, hd)   dt: (B, S, nh)   A: (nh,) negative
+    Bm: (B, S, N)        Cm: (B, S, N)
+    Returns y (B,S,nh,hd) and final state (B, nh, hd, N).
+    """
+    Bsz, S, nh, hd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = S // Q
+    assert nc * Q == S, f"seq {S} not divisible by chunk {Q}"
+
+    xc = x.reshape(Bsz, nc, Q, nh, hd)
+    dtc = dt.reshape(Bsz, nc, Q, nh)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    dtA = dtc * A[None, None, None, :]                     # (B,nc,Q,nh)
+    cum = jnp.cumsum(dtA, axis=2)                          # running sum in chunk
+
+    # intra-chunk (the "quadratic attention" term)
+    L = jnp.exp(_segsum(dtA.transpose(0, 1, 3, 2)))        # (B,nc,nh,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))            # (B,nc,Q,Q)
+    dtx = xc * dtc[..., None]                              # (B,nc,Q,nh,hd)
+    y_diag = jnp.einsum("bcqk,bchqk,bckhd->bcqhd", scores,
+                        L.astype(jnp.float32), dtx.astype(jnp.float32))
+
+    # chunk summary states
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,nc,Q,nh)
+    chunk_states = jnp.einsum("bckn,bckh,bckhd->bchdn", Bc.astype(jnp.float32),
+                              decay_states.astype(jnp.float32),
+                              dtx.astype(jnp.float32))     # (B,nc,nh,hd,N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nc,nh)
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, nh, hd, N), jnp.float32)
+
+    def step(state, inputs):
+        dec, new = inputs                                   # (B,nh), (B,nh,hd,N)
+        out_state = state
+        state = state * dec[:, :, None, None] + new
+        return state, out_state
+
+    xs = (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(chunk_states, 1, 0))
+    final_state, prev_states = jax.lax.scan(step, init_state.astype(jnp.float32), xs)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (B,nc,nh,hd,N)
+
+    # inter-chunk contribution
+    y_off = jnp.einsum("bcqn,bchdn,bcqh->bcqhd", Cc.astype(jnp.float32),
+                       prev_states, jnp.exp(cum).astype(jnp.float32))
+
+    y = (y_diag + y_off).reshape(Bsz, S, nh, hd)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_step(x, dt, A, Bm, Cm, state):
+    """Single-token recurrence.  x: (B,nh,hd)  dt: (B,nh)  Bm/Cm: (B,N)
+    state: (B,nh,hd,N) -> (y (B,nh,hd), new_state)."""
+    dtA = jnp.exp(dt * A[None, :])                          # (B,nh)
+    upd = jnp.einsum("bn,bhd,bh->bhdn", Bm.astype(jnp.float32),
+                     x.astype(jnp.float32), dt.astype(jnp.float32))
+    new_state = state * dtA[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhdn->bhd", Cm.astype(jnp.float32), new_state)
+    return y.astype(x.dtype), new_state
+
+
+def apply_ssm(cfg: ModelConfig, p: Dict[str, Any], x: jax.Array, *,
+              cache: Optional[Dict[str, Any]] = None
+              ) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    """Full Mamba2 mixer. x: (B,S,D). cache: {"state": (B,nh,hd,N),
+    "conv": (B,W-1,di)} for decode (S==1 uses the recurrent step)."""
+    B, S, D = x.shape
+    nh, hd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(x.dtype))
+    xi = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype))
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32),
+                                    p["wdt"].astype(jnp.float32))
+                         + p["dt_bias"].astype(jnp.float32))
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"].astype(x.dtype))
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"].astype(x.dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    conv_cache = cache.get("conv") if cache else None
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_cache)
+    xh = xi.reshape(B, S, nh, hd)
+
+    if cache is not None and S == 1:
+        y, new_state = ssd_step(xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0],
+                                cache["state"])
+        y = y[:, None]                                       # (B,1,nh,hd)
+    else:
+        init = cache["state"] if cache is not None else None
+        # pad the sequence to a chunk multiple; padded steps carry dt=0 so
+        # the state passes through unchanged (exp(0*A)=1, update dt*Bx=0)
+        pad = (-S) % min(cfg.ssm_chunk, S) if S > 1 else 0
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        y, new_state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, init)
+        if pad:
+            y = y[:, :S]
+            xh = xh[:, :S]
+
+    y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, cfg.d_inner)
+    # gated RMSNorm (mamba2 style)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + 1e-6)
+         * p["out_norm"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(x.dtype))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": new_state, "conv": new_conv}
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict[str, Any]:
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                           jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, cfg.d_inner), dtype),
+    }

@@ -1,0 +1,6 @@
+from .optimizers import Optimizer, adamw, adafactor, sgdm, make_optimizer
+from .schedules import constant, warmup_cosine
+from . import compression
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgdm", "make_optimizer",
+           "constant", "warmup_cosine", "compression"]

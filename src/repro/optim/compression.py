@@ -1,0 +1,55 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Distributed-optimization trick for the all-reduce path: gradients are
+quantized to int8 with a per-chunk fp32 scale before crossing ICI (4x fewer
+collective bytes), and the quantization residual is carried in an error-
+feedback buffer so the compression is unbiased over time (Seide et al. /
+EF-SGD style).  Applied on the *arena* representation — one contiguous
+buffer per dtype — so compression and the fused collective compose.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+CHUNK = 2048  # elements per quantization scale
+
+
+def _pad_to(x: jax.Array, m: int) -> jax.Array:
+    pad = (-x.shape[0]) % m
+    return jnp.pad(x, (0, pad)) if pad else x
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array, int]:
+    """x: 1-D float -> (int8 values, per-chunk scales, original length)."""
+    n = x.shape[0]
+    xp = _pad_to(x.astype(jnp.float32), CHUNK).reshape(-1, CHUNK)
+    scale = jnp.max(jnp.abs(xp), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xp / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale[:, 0], n
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, n: int) -> jax.Array:
+    xq = q.astype(jnp.float32).reshape(-1, CHUNK) * scale[:, None]
+    return xq.reshape(-1)[:n]
+
+
+def compress_with_feedback(grad_flat: jax.Array, error: jax.Array
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (int8 payload, scales, new error buffer).
+
+    new_error = (grad + error) - dequant(quant(grad + error))
+    """
+    corrected = grad_flat.astype(jnp.float32) + error
+    q, scale, n = quantize_int8(corrected)
+    approx = dequantize_int8(q, scale, n)
+    return q, scale, corrected - approx
+
+
+def init_error_buffers(arena_buffers: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    return {k: jnp.zeros((v.shape[0],), jnp.float32)
+            for k, v in arena_buffers.items()
+            if jnp.issubdtype(v.dtype, jnp.floating)}

@@ -1,0 +1,20 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(1.0, warmup_steps)
+        t = (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(peak_lr) * jnp.where(step < warmup_steps, warm, cos)
+    return f

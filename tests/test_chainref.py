@@ -1,0 +1,114 @@
+"""pointerchain semantics: declare / extract / region / write-back (§3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (TreePath, chain_call, chain_jit, declare, extract,
+                        insert, region)
+
+
+@pytest.fixture()
+def sim():
+    # Figure 1's simulation->atoms->traits->positions
+    return {"simulation": {
+        "atoms": {"traits": {"positions": jnp.arange(12.0).reshape(3, 4),
+                             "momenta": jnp.ones((3, 4))},
+                  "N": jnp.int32(3)},
+        "box": jnp.ones((2, 2))}}
+
+
+def test_declare_resolves_effective_address(sim):
+    refs = declare(sim, "simulation.atoms.traits.positions")
+    assert len(refs) == 1
+    leaves = jax.tree_util.tree_leaves(sim)
+    assert leaves[refs[0].flat_index] is sim["simulation"]["atoms"]["traits"]["positions"]
+
+
+def test_declare_subtree_expands_to_leaf_chains(sim):
+    refs = declare(sim, "simulation.atoms")
+    names = {str(r.path) for r in refs}
+    assert names == {"simulation.atoms.N", "simulation.atoms.traits.momenta",
+                     "simulation.atoms.traits.positions"}
+
+
+def test_declare_unknown_chain_raises(sim):
+    with pytest.raises(KeyError):
+        declare(sim, "simulation.bogus.chain")
+
+
+def test_region_scalar_writeback(sim):
+    """Paper §3.3: scalar temporaries are written back on region end."""
+    refs = declare(sim, "simulation.atoms.N")
+    with region(sim, refs) as r:
+        r[0] = r[0] + 5
+    assert int(TreePath.parse("simulation.atoms.N").resolve(r.result)) == 8
+    # original tree unchanged
+    assert int(sim["simulation"]["atoms"]["N"]) == 3
+
+
+def test_region_exception_does_not_writeback(sim):
+    refs = declare(sim, "simulation.atoms.N")
+    try:
+        with region(sim, refs) as r:
+            r[0] = r[0] + 5
+            raise RuntimeError("kernel failed")
+    except RuntimeError:
+        pass
+    assert r.result is sim
+
+
+def test_chain_call_condensed_form(sim):
+    out = chain_call(lambda p: p * 2.0, sim,
+                     ["simulation.atoms.traits.positions"], jit=True)
+    np.testing.assert_allclose(
+        np.asarray(out["simulation"]["atoms"]["traits"]["positions"]),
+        np.arange(12).reshape(3, 4) * 2)
+
+
+def test_chain_jit_reuses_refs_across_treedefs(sim):
+    step = chain_jit(lambda p: p + 1.0, ["simulation.atoms.traits.positions"])
+    out1 = step(sim)
+    out2 = step(out1)
+    np.testing.assert_allclose(
+        np.asarray(out2["simulation"]["atoms"]["traits"]["positions"]),
+        np.arange(12).reshape(3, 4) + 2)
+
+
+def test_pointerchain_shrinks_jaxpr():
+    """Tables 3-4 analogue: the region jaxpr over extracted leaves is smaller
+    than the whole-tree jaxpr, and the gap grows with chain depth k."""
+    def deep_tree(k):
+        leaf = {"A": jnp.zeros((8,)), "nA": jnp.int32(8)}
+        t = leaf
+        for i in range(k):
+            t = {f"L{k - i}": t, "payload": jnp.zeros((4,))}
+        return {"root": t}
+
+    def count_eqns(fn, *args):
+        return len(jax.make_jaxpr(fn)(*args).eqns)
+
+    sizes = {}
+    for k in (2, 6):
+        tree = deep_tree(k)
+        path = "root" + "".join(f".L{i}" for i in range(1, k + 1)) + ".A"
+
+        def whole(t):  # UVM-style: thread the whole tree
+            return TreePath.parse(path).update(t, lambda a: a * 2.0)
+
+        leaf = extract(tree, declare(tree, path))[0]
+        whole_eqns = count_eqns(whole, tree)
+        chain_eqns = count_eqns(lambda a: a * 2.0, leaf)
+        sizes[k] = (whole_eqns, chain_eqns)
+        assert chain_eqns <= whole_eqns
+    # deeper chains do not grow the pointerchain region
+    assert sizes[6][1] == sizes[2][1]
+
+
+def test_insert_roundtrip(sim):
+    refs = declare(sim, "simulation.box", "simulation.atoms.N")
+    leaves = extract(sim, refs)
+    out = insert(sim, refs, leaves)
+    for a, b in zip(jax.tree_util.tree_leaves(sim),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

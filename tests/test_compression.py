@@ -1,0 +1,55 @@
+"""int8 gradient compression with error feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.compression import (CHUNK, compress_with_feedback,
+                                     dequantize_int8, quantize_int8)
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(5000), jnp.float32)
+    q, scale, n = quantize_int8(x)
+    back = dequantize_int8(q, scale, n)
+    assert back.shape == x.shape
+    # per-chunk max-abs scaling: error <= scale/2 per element
+    err = np.abs(np.asarray(back - x))
+    max_allowed = np.repeat(np.asarray(scale), CHUNK)[:5000] * 0.5 + 1e-6
+    assert np.all(err <= max_allowed)
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """EF: the accumulated transmitted signal tracks the true sum of grads."""
+    rng = np.random.default_rng(1)
+    n = CHUNK * 2
+    err = jnp.zeros(n, jnp.float32)
+    true_sum = np.zeros(n)
+    sent_sum = np.zeros(n)
+    for i in range(50):
+        g = jnp.asarray(rng.standard_normal(n) * 0.01, jnp.float32)
+        q, scale, err = compress_with_feedback(g, err)
+        sent = dequantize_int8(q, scale, n)
+        true_sum += np.asarray(g)
+        sent_sum += np.asarray(sent)
+    # residual is bounded by the current error buffer, not growing
+    np.testing.assert_allclose(sent_sum + np.asarray(err), true_sum,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_compressed_sgd_still_converges():
+    rng = np.random.default_rng(2)
+    target = rng.standard_normal(CHUNK).astype(np.float32)
+    w = jnp.zeros(CHUNK, jnp.float32)
+    err = jnp.zeros(CHUNK, jnp.float32)
+
+    def loss(w):
+        return 0.5 * jnp.mean((w - target) ** 2)
+
+    # grads are O(1/CHUNK) because of the mean; lr scaled to compensate
+    for _ in range(200):
+        g = jax.grad(loss)(w)
+        q, scale, err = compress_with_feedback(g, err)
+        w = w - 1000.0 * dequantize_int8(q, scale, CHUNK)
+    assert float(loss(w)) < 1e-3

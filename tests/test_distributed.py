@@ -1,0 +1,122 @@
+"""Distributed paths that need >1 device: run in subprocesses that force a
+host device count BEFORE importing jax (the dry-run's own pattern)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_child(code: str, timeout=900) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    res = subprocess.run([sys.executable, "-c", code], env=env, cwd=ROOT,
+                         capture_output=True, text=True, timeout=timeout)
+    assert res.returncode == 0, f"child failed:\n{res.stderr[-3000:]}"
+    return res.stdout
+
+
+@pytest.mark.slow
+def test_dp_shardmap_schemes_agree_and_fuse():
+    """pertensor / arena / arena+int8 all train; arena fuses collectives."""
+    out = _run_child(r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.hlo_analysis import collective_stats
+from repro.models import registry
+from repro.optim import make_optimizer, constant
+from repro.runtime.train import (init_error_state, make_dp_train_step,
+                                 train_state)
+from repro.data import SyntheticLM
+
+api = registry.get("llama3.2-1b", smoke=True)
+opt = make_optimizer("sgdm")
+mesh = make_debug_mesh(data=4, model=1)
+data = SyntheticLM(api.cfg.vocab_size, 16, 8)
+result = {}
+for scheme, compress in (("pertensor", False), ("arena", False),
+                         ("arena", True)):
+    step = make_dp_train_step(api, opt, constant(1e-2), mesh,
+                              grad_scheme=scheme, compress=compress)
+    state = train_state(api, opt, jax.random.PRNGKey(0))
+    err = init_error_state(api, compress)
+    losses = []
+    for s in range(8):
+        b = data.batch(s)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        state, metrics, err = step(state, batch, err)
+        losses.append(float(metrics["loss"]))
+    stats = collective_stats(
+        jax.jit(step).lower(state, batch, err).compile().as_text())
+    emitted = str(jax.make_jaxpr(step)(state, batch, err)).count("psum")
+    result[scheme + ("+int8" if compress else "")] = {
+        "first": losses[0], "last": losses[-1],
+        "colls": stats["total_count"], "emitted_psums": emitted}
+print(json.dumps(result))
+""")
+    res = json.loads(out.strip().splitlines()[-1])
+    for name, r in res.items():
+        assert r["last"] < r["first"], f"{name} did not learn: {r}"
+    # marshalling on the wire: the arena path EMITS one psum per dtype
+    # bucket instead of one per leaf.  (XLA's all-reduce combiner then fuses
+    # the per-tensor psums into tuple all-reduces on its own — the paper's
+    # conjecture that compilers implement marshalling internally, verified —
+    # so the compiled counts converge while the emitted counts differ.)
+    assert res["arena"]["emitted_psums"] < res["pertensor"]["emitted_psums"]
+    assert res["arena"]["colls"] <= res["pertensor"]["colls"]
+    # schemes agree on the training trajectory (int8 within EF tolerance)
+    assert abs(res["arena"]["last"] - res["pertensor"]["last"]) < 1e-3
+    assert abs(res["arena+int8"]["last"] - res["pertensor"]["last"]) < 0.1
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_configs_single_and_multi():
+    """The dry-run entry point itself, on reduced configs, both meshes."""
+    out = _run_child(
+        "import sys; sys.argv=['dryrun','--arch','llama3.2-1b','--shape',"
+        "'train_4k','--mesh','both','--smoke'];"
+        "from repro.launch import dryrun; dryrun.main(sys.argv[1:])")
+    assert "cells ok" in out
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_decode_path():
+    out = _run_child(
+        "import sys; sys.argv=['dryrun','--arch','mamba2-1.3b','--shape',"
+        "'decode_32k','--mesh','single','--smoke'];"
+        "from repro.launch import dryrun; dryrun.main(sys.argv[1:])")
+    assert "cells ok" in out
+
+
+def test_elastic_reshard_on_restore(tmp_path):
+    """Checkpoint written under one topology restores onto another."""
+    out = _run_child(f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import checkpoint as ckpt
+
+state = {{"w": np.arange(64, dtype=np.float32).reshape(8, 8)}}
+mesh_a = jax.make_mesh((8,), ("data",))
+sh_a = {{"w": NamedSharding(mesh_a, P("data"))}}
+# save from topology A (8-way sharded)
+dev_state = {{"w": jax.device_put(state["w"], sh_a["w"])}}
+ckpt.save(dev_state, r"{tmp_path}", 1)
+# restore onto topology B (2x4 mesh, different sharding)
+mesh_b = jax.make_mesh((2, 4), ("data", "model"))
+sh_b = {{"w": NamedSharding(mesh_b, P("model", "data"))}}
+out = ckpt.restore(r"{tmp_path}", 1, shardings=sh_b)
+np.testing.assert_array_equal(np.asarray(out["w"]), state["w"])
+assert out["w"].sharding == sh_b["w"]
+print("resharded ok")
+""")
+    assert "resharded ok" in out

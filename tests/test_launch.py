@@ -1,0 +1,112 @@
+"""Launch-layer logic that doesn't need real devices: rule tables, spec
+demotion, roofline math, HLO parsing."""
+import types
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.shapes import SHAPES, skip_reason
+from repro.launch.hlo_analysis import collective_stats, _shape_bytes
+from repro.launch.mesh import adapt_batch_rule, default_rules, _demote_spec
+from repro.models import registry
+from repro.models.pspec import logical_to_spec
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.devices = np.empty(shape)
+        self.axis_names = names
+
+
+SINGLE = FakeMesh((16, 16), ("data", "model"))
+MULTI = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_default_rules_single_vs_multi():
+    r1 = default_rules(SINGLE)
+    r2 = default_rules(MULTI)
+    assert r1["batch"] == ("data",)
+    assert r2["batch"] == ("pod", "data")
+    assert r1["heads"] == ("model",)
+
+
+def test_logical_to_spec_no_axis_reuse():
+    rules = {"embed": ("data",), "mlp": ("data",)}  # conflict: same axis
+    spec = logical_to_spec(("embed", "mlp"), rules)
+    assert spec == P("data", None)   # second claim dropped
+
+
+def test_demote_spec_drops_non_dividing_axes():
+    # arctic: 56 heads cannot shard 16-way -> demoted to replicated
+    spec = _demote_spec(P(None, "model", None), (35, 56, 7168), SINGLE)
+    assert spec == P(None, None, None)
+    # dividing dims keep their axes
+    spec = _demote_spec(P("data", "model"), (64, 32), SINGLE)
+    assert spec == P("data", "model")
+    # tuple entries keep the dividing prefix
+    spec = _demote_spec(P(("pod", "data"), None), (2, 10), MULTI)
+    assert spec == P("pod", None)
+
+
+def test_adapt_batch_rule_for_batch_one():
+    rules = dict(default_rules(SINGLE))
+    out = adapt_batch_rule(rules, SINGLE, global_batch=1)   # long_500k
+    assert out["batch"] is None
+    out = adapt_batch_rule(rules, SINGLE, global_batch=256)
+    assert out["batch"] == ("data",)
+
+
+def test_skip_reasons_match_design():
+    for arch in registry.ARCH_IDS:
+        cfg = registry.load_config(arch)
+        reason = skip_reason(cfg, "long_500k")
+        if cfg.family in ("ssm", "hybrid"):
+            assert reason is None
+        else:
+            assert reason and "sub-quadratic" in reason
+        assert skip_reason(cfg, "train_4k") is None
+
+
+def test_input_specs_cover_every_runnable_cell():
+    for arch in registry.ARCH_IDS:
+        api = registry.get(arch)
+        for name, shape in SHAPES.items():
+            if skip_reason(api.cfg, name):
+                continue
+            specs = api.input_specs(shape)
+            assert "tokens" in specs
+            assert specs["tokens"].shape[0] == shape.global_batch
+            cache = api.abstract_cache(shape)
+            assert "pos" in cache
+            axes = api.cache_axes(shape)
+            assert set(axes) == set(cache)
+
+
+def test_collective_stats_parses_tuples_and_comments():
+    hlo = """
+  %all-reduce = (f32[4]{0}, /*index=1*/f32[8]{0}) all-reduce(%a, %b), channel_id=1
+  %ag = bf16[16,128]{1,0} all-gather(%x), channel_id=2
+  %all-reduce-start = f32[32]{0} all-reduce-start(%y), channel_id=3
+  %all-reduce-done = f32[32]{0} all-reduce-done(%all-reduce-start)
+  %name-trap-all-reduce = f32[4]{0} add(%p, %q)
+"""
+    st = collective_stats(hlo)
+    assert st["per_op"]["all-reduce"]["count"] == 2  # tuple + start (not done)
+    assert st["per_op"]["all-reduce"]["bytes"] == (4 + 8) * 4 + 32 * 4
+    assert st["per_op"]["all-gather"]["count"] == 1
+    assert st["per_op"]["all-gather"]["bytes"] == 16 * 128 * 2
+
+
+def test_model_flops_sane():
+    from benchmarks.roofline import model_flops
+    cfg = registry.load_config("llama3.2-1b")
+    mf = model_flops(cfg, SHAPES["train_4k"])
+    # ~6*N*D for a 1.24B model over 1.05M tokens = ~7.8e15, plus attention
+    n = 1.24e9
+    assert 0.5 * 6 * n * 256 * 4096 < mf < 3 * 6 * n * 256 * 4096
+    # decode flops are ~B/(B*S) of prefill
+    mp = model_flops(cfg, SHAPES["prefill_32k"])
+    md = model_flops(cfg, SHAPES["decode_32k"])
+    assert md < mp / 100

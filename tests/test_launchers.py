@@ -1,0 +1,47 @@
+"""CLI drivers: train/serve entry points run end to end (smoke-sized)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.launch import serve as serve_cli
+from repro.launch import train as train_cli
+
+
+def test_train_cli_smoke(capsys, tmp_path):
+    train_cli.main(["--arch", "llama3.2-1b", "--smoke", "--steps", "25",
+                    "--batch", "4", "--seq", "32", "--lr", "1e-2",
+                    "--ckpt-dir", str(tmp_path), "--ckpt-every", "10",
+                    "--log-every", "0"])
+    out = capsys.readouterr().out
+    assert "done: loss" in out
+    # checkpoint was written and the serve CLI can restore from it
+    serve_cli.main(["--arch", "llama3.2-1b", "--smoke", "--requests", "3",
+                    "--slots", "2", "--max-seq", "48", "--max-new", "4",
+                    "--ckpt-dir", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert "served 3/3 requests" in out
+
+
+def test_train_cli_dp_shardmap_arena(capsys):
+    train_cli.main(["--arch", "llama3.2-1b", "--smoke", "--steps", "6",
+                    "--batch", "4", "--seq", "32", "--dp-shardmap",
+                    "--grad-scheme", "arena", "--log-every", "0"])
+    assert "done: loss" in capsys.readouterr().out
+
+
+def test_train_cli_8bit_optimizer(capsys, monkeypatch, tmp_path):
+    # route the llama smoke config through the 8-bit optimizer
+    import dataclasses
+    from repro.models import registry
+    orig_get = registry.get
+
+    def patched(arch, smoke=False):
+        api = orig_get(arch, smoke=smoke)
+        cfg = dataclasses.replace(api.cfg, optimizer="adamw8bit")
+        return registry.get_model(cfg)
+
+    monkeypatch.setattr(registry, "get", patched)
+    monkeypatch.setattr(train_cli.registry, "get", patched)
+    train_cli.main(["--arch", "llama3.2-1b", "--smoke", "--steps", "10",
+                    "--batch", "4", "--seq", "32", "--log-every", "0"])
+    assert "done: loss" in capsys.readouterr().out
