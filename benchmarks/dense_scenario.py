@@ -10,6 +10,8 @@ from __future__ import annotations
 import sys
 from typing import List
 
+from repro.core import make_scheme
+
 from .scenarios import (dense_chain, dense_tree, dense_uvm_access_set,
                         run_algorithm2)
 
@@ -29,9 +31,10 @@ def run(qs=(4, 8), ns=(10**3, 10**4), depth=3, out=sys.stdout,
             base = None
             for scheme in SCHEMES:
                 best = None
+                inst = make_scheme(scheme)  # reused across repeats
                 for _ in range(repeats):
                     m = run_algorithm2(tree, used, scheme,
-                                       uvm_access=uvm_access)
+                                       uvm_access=uvm_access, scheme=inst)
                     assert m.ok, f"check failed: {scheme} q={q} n={n}"
                     if best is None or m.wall_us < best.wall_us:
                         best = m

@@ -9,6 +9,8 @@ from __future__ import annotations
 import sys
 from typing import List
 
+from repro.core import make_scheme
+
 from .scenarios import (Measurement, linear_tree, linear_used_paths,
                         run_algorithm2)
 
@@ -29,8 +31,9 @@ def run(ks=(2, 6, 10), ns=(10**3, 10**5), layouts=LAYOUTS, out=sys.stdout,
                 base = None
                 for scheme in SCHEMES:
                     best = None
+                    inst = make_scheme(scheme)  # reused across repeats
                     for _ in range(repeats):
-                        m = run_algorithm2(tree, used, scheme)
+                        m = run_algorithm2(tree, used, scheme, scheme=inst)
                         assert m.ok, f"check failed: {scheme} k={k} n={n}"
                         if best is None or m.wall_us < best.wall_us:
                             best = m

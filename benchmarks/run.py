@@ -7,11 +7,16 @@ Sections (paper artifact -> module):
     datasize            Eq. 1-3 / Tables 1-2     benchmarks.datasize
     linear              §4.1 / Figs. 5-6         benchmarks.linear_scenario
     dense               §4.2 / Fig. 7            benchmarks.dense_scenario
+    transfer            arena-engine steady state benchmarks.transfer_steady
     instructions        §6.3 / Tables 3-4        benchmarks.instruction_count
     marshal_kernel      Alg. 1 as a TPU kernel   benchmarks (inline)
     checkpoint          marshalled ckpt I/O      benchmarks.checkpoint_bench
     collective_fusion   arena-fused psums        benchmarks.collective_fusion
     roofline            §Roofline summary        benchmarks.roofline
+
+The transfer section additionally writes ``BENCH_transfer.json`` (repo
+root): scheme x scenario x {first_wall_us, cached_wall_us, h2d_bytes,
+h2d_calls, enqueue_us, sync_us} — the machine-readable perf trajectory.
 """
 from __future__ import annotations
 
@@ -58,6 +63,15 @@ def main(argv=None) -> None:
             dense_scenario.run(qs=(4,), ns=(10**3,), repeats=1)
         else:
             dense_scenario.run()
+
+    if "transfer" not in skip:
+        _section("transfer steady state (arena engine, first vs cached call)")
+        from . import transfer_steady
+        json_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_transfer.json")
+        transfer_steady.run(quick=args.quick,
+                            repeats=3 if args.quick else 5,
+                            json_path=json_path)
 
     if "instructions" not in skip:
         _section("instruction count (Tables 3-4)")

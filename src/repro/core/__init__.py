@@ -9,6 +9,8 @@ from .chainref import (ChainRef, declare, extract, insert, region, chain_call,
                        chain_jit)
 from .arena import (ArenaLayout, LeafSlot, plan, pack, unpack, repack_into,
                     datasize_linear, datasize_dense)
+from .engine import (ArenaEntry, cached_plan, get_entry, pack_traced,
+                     unpack_traced, repack_traced, cache_stats, clear_cache)
 from .schemes import (TransferLedger, TransferScheme, UVMScheme, MarshalScheme,
                       PointerChainScheme, SCHEMES, make_scheme)
 from .deepcopy import (full_deepcopy, selective_deepcopy, host_skeleton,
@@ -20,6 +22,8 @@ __all__ = [
     "chain_jit",
     "ArenaLayout", "LeafSlot", "plan", "pack", "unpack", "repack_into",
     "datasize_linear", "datasize_dense",
+    "ArenaEntry", "cached_plan", "get_entry", "pack_traced", "unpack_traced",
+    "repack_traced", "cache_stats", "clear_cache",
     "TransferLedger", "TransferScheme", "UVMScheme", "MarshalScheme",
     "PointerChainScheme", "SCHEMES", "make_scheme",
     "full_deepcopy", "selective_deepcopy", "host_skeleton", "tree_bytes",

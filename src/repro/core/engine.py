@@ -1,0 +1,235 @@
+"""Arena transfer engine — persistent layouts, staging buffers, fused kernels.
+
+The paper's Algorithm 1 separates *planning* (determineTotalBytes + the
+requestList) from *data motion* (serve allocations, one batched DMA).  The
+seed code re-ran the plan and re-packed with ``np.concatenate`` on every
+``to_device``; this module makes the plan a reusable, cached artifact
+(LLAMA's layout-as-metadata, arXiv 2106.04284) so the steady-state hot path
+is pure data motion (the pointerchain extract-once principle,
+arXiv 1906.01128, applied to the whole marshalling plan):
+
+  * :func:`cached_plan`   — module-level ``ArenaLayout`` cache keyed by
+                            (treedef, leaf signature, alignment), the same
+                            shape as ``chainref._INDEX_CACHE``.
+  * :class:`ArenaEntry`   — per-layout persistent state: a preallocated host
+                            staging buffer per dtype bucket (``pack_host`` is
+                            in-place slice writes, zero allocations) and
+                            jit-compiled fused unpack / device-pack / repack
+                            (one compiled gather/scatter region instead of a
+                            per-leaf dispatch loop).
+  * :func:`pack_traced` / :func:`unpack_traced` — the same fused transforms
+                            as free functions, safe to call under an outer
+                            ``jit``/``shard_map`` trace (the gradient-arena
+                            path in ``runtime/train.py``).
+
+Invariant: staging buffers are reused across calls, and ``jax.device_put``
+may zero-copy ALIAS a suitably aligned numpy buffer instead of copying it
+(observed on the XLA CPU client).  Callers must therefore synchronize every
+computation that reads a staged bucket before the next ``pack_host`` — see
+DESIGN.md §4 for the full invariant list.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import arena as arena_lib
+from .arena import ArenaLayout
+
+Buffers = arena_lib.Buffers
+
+# cache: (treedef, leaf signature, align_elems) -> ArenaLayout
+_LAYOUT_CACHE: Dict[Tuple[Any, Tuple, int], ArenaLayout] = {}
+# LRU cache: same key -> ArenaEntry.  Bounded: each entry pins full-size
+# host staging buffers plus three compiled executables, so unlike the
+# (tiny) layouts they cannot be allowed to accumulate forever.
+_ENTRY_CACHE: "collections.OrderedDict[Tuple[Any, Tuple, int], ArenaEntry]" \
+    = collections.OrderedDict()
+ENTRY_CACHE_MAX = 64
+_STATS = {"hits": 0, "misses": 0}
+
+
+def _leaf_signature(leaves) -> Tuple:
+    sig = []
+    for leaf in leaves:
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            sig.append((tuple(leaf.shape), np.dtype(leaf.dtype).str))
+        else:
+            arr = np.asarray(leaf)
+            sig.append((tuple(arr.shape), arr.dtype.str))
+    return tuple(sig)
+
+
+def _layout_key(tree: Any, align_elems: int) -> Tuple[Any, Tuple, int]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return (treedef, _leaf_signature(leaves), align_elems)
+
+
+def _plan_for_key(key: Tuple[Any, Tuple, int], tree: Any,
+                  align_elems: int) -> ArenaLayout:
+    layout = _LAYOUT_CACHE.get(key)
+    if layout is None:
+        _STATS["misses"] += 1
+        layout = arena_lib.plan(tree, align_elems)
+        _LAYOUT_CACHE[key] = layout
+    else:
+        _STATS["hits"] += 1
+    return layout
+
+
+def cached_plan(tree: Any, align_elems: int = 1) -> ArenaLayout:
+    """``arena.plan`` behind the persistent layout cache.
+
+    Works on concrete trees AND on tracer trees (inside jit/shard_map): the
+    key only reads shapes/dtypes, never values.
+    """
+    return _plan_for_key(_layout_key(tree, align_elems), tree, align_elems)
+
+
+def cache_stats() -> Dict[str, int]:
+    return dict(_STATS)
+
+
+def clear_cache() -> None:
+    _LAYOUT_CACHE.clear()
+    _ENTRY_CACHE.clear()
+    _STATS["hits"] = _STATS["misses"] = 0
+
+
+# ---------------------------------------------------------------------------
+# fused transforms (trace-safe free functions)
+# ---------------------------------------------------------------------------
+
+def unpack_leaves(buffers: Buffers, layout: ArenaLayout) -> List[Any]:
+    """Slice every leaf out of its bucket.  All offsets are static, so under
+    jit this lowers to one fused gather region — no per-leaf dispatch."""
+    leaves = []
+    for slot in layout.slots:
+        buf = buffers[slot.bucket]
+        flat = jax.lax.slice_in_dim(buf, slot.offset, slot.offset + slot.size)
+        leaves.append(jnp.reshape(flat, slot.shape))
+    return leaves
+
+
+def unpack_traced(buffers: Buffers, layout: ArenaLayout) -> Any:
+    return jax.tree_util.tree_unflatten(layout.treedef,
+                                        unpack_leaves(buffers, layout))
+
+
+def _scatter_leaves(buffers: Buffers, leaves, layout: ArenaLayout) -> Buffers:
+    out = dict(buffers)
+    for leaf, slot in zip(leaves, layout.slots):
+        flat = jnp.reshape(jnp.asarray(leaf, dtype=slot.dtype), (-1,))
+        out[slot.bucket] = jax.lax.dynamic_update_slice_in_dim(
+            out[slot.bucket], flat, slot.offset, 0)
+    return out
+
+
+def pack_traced(tree: Any, layout: ArenaLayout) -> Buffers:
+    """Scatter leaves into fresh zero buckets.  Static offsets: one fused
+    scatter region under jit (the device-side direction of Alg. 1)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if len(leaves) != layout.num_leaves:
+        raise ValueError("tree does not match arena layout")
+    zeros = {b: jnp.zeros((n,), np.dtype(b))
+             for b, n in layout.bucket_sizes.items()}
+    return _scatter_leaves(zeros, leaves, layout)
+
+
+def repack_traced(buffers: Buffers, layout: ArenaLayout, tree: Any) -> Buffers:
+    """Fused ``arena.repack_into``: scatter a tree's leaves back over an
+    existing arena (the gradient-arena update path)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if len(leaves) != layout.num_leaves:
+        raise ValueError("tree does not match arena layout")
+    return _scatter_leaves(buffers, leaves, layout)
+
+
+# ---------------------------------------------------------------------------
+# ArenaEntry — persistent per-layout state
+# ---------------------------------------------------------------------------
+
+class ArenaEntry:
+    """Everything reusable about one (treedef, signature, alignment) point:
+    the layout, a host staging buffer per bucket, and the compiled fused
+    transforms.  Created once, then every call is pure data motion."""
+
+    def __init__(self, layout: ArenaLayout):
+        self.layout = layout
+        # preallocated, zero-initialised staging: alignment gaps stay zero
+        # forever; pack_host only ever rewrites live leaf extents.
+        self.staging: Dict[str, np.ndarray] = {
+            b: np.zeros(int(n), np.dtype(b))
+            for b, n in layout.bucket_sizes.items()}
+        self.pack_host_calls = 0
+
+        def _unpack(buffers):
+            return tuple(unpack_leaves(buffers, layout))
+
+        def _pack_device(leaves):
+            zeros = {b: jnp.zeros((n,), np.dtype(b))
+                     for b, n in layout.bucket_sizes.items()}
+            return _scatter_leaves(zeros, leaves, layout)
+
+        def _repack(buffers, leaves):
+            return _scatter_leaves(buffers, leaves, layout)
+
+        # one compiled gather/scatter region each; compiled on first use,
+        # steady-state is a single dispatch.
+        self.unpack_leaves_jit = jax.jit(_unpack)
+        self.pack_device_jit = jax.jit(_pack_device)
+        self.repack_jit = jax.jit(_repack)
+
+    # -- host side ----------------------------------------------------------
+    def pack_host(self, tree: Any) -> Buffers:
+        """Marshal into the persistent staging buffers: in-place slice writes,
+        no list-building, no ``np.concatenate``, no allocations."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        if len(leaves) != self.layout.num_leaves:
+            raise ValueError("tree does not match arena layout")
+        for leaf, slot in zip(leaves, self.layout.slots):
+            if slot.size == 0:
+                continue
+            dst = self.staging[slot.bucket]
+            dst[slot.offset:slot.offset + slot.size] = \
+                np.asarray(leaf, dtype=slot.dtype).reshape(-1)
+        self.pack_host_calls += 1
+        return self.staging
+
+    # -- device side --------------------------------------------------------
+    def unpack(self, buffers: Buffers) -> Any:
+        """Fused acc_attach: one compiled gather, then unflatten."""
+        leaves = self.unpack_leaves_jit(dict(buffers))
+        return jax.tree_util.tree_unflatten(self.layout.treedef, list(leaves))
+
+    def pack_device(self, tree: Any) -> Buffers:
+        leaves = tuple(jax.tree_util.tree_leaves(tree))
+        if len(leaves) != self.layout.num_leaves:
+            raise ValueError("tree does not match arena layout")
+        return self.pack_device_jit(leaves)
+
+    def repack(self, buffers: Buffers, tree: Any) -> Buffers:
+        leaves = tuple(jax.tree_util.tree_leaves(tree))
+        return self.repack_jit(dict(buffers), leaves)
+
+
+def get_entry(tree: Any, align_elems: int = 1) -> ArenaEntry:
+    """The engine's front door: cached ``ArenaEntry`` for this tree's shape.
+
+    LRU-bounded at :data:`ENTRY_CACHE_MAX`: evicted entries stay usable for
+    any scheme still holding them, they just stop being shared."""
+    key = _layout_key(tree, align_elems)
+    entry = _ENTRY_CACHE.get(key)
+    if entry is None:
+        entry = ArenaEntry(_plan_for_key(key, tree, align_elems))
+        _ENTRY_CACHE[key] = entry
+        while len(_ENTRY_CACHE) > ENTRY_CACHE_MAX:
+            _ENTRY_CACHE.popitem(last=False)
+    else:
+        _STATS["hits"] += 1
+        _ENTRY_CACHE.move_to_end(key)
+    return entry

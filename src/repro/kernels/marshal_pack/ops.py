@@ -13,6 +13,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...core import arena as arena_lib
+from ...core import engine as engine_lib
+
 from . import kernel as K
 from . import ref
 
@@ -23,16 +26,36 @@ def _pad_len(n: int) -> int:
     return -(-n // TILE) * TILE
 
 
-def build_tile_maps(shapes) -> Tuple[np.ndarray, np.ndarray, int]:
+def build_tile_maps(shapes, layout: "arena_lib.ArenaLayout" = None
+                    ) -> Tuple[np.ndarray, np.ndarray, int]:
     """For a list of leaf shapes: (pack_map, unpack_map, n_tiles).
 
-    Source pool layout: leaves concatenated, each padded to a TILE multiple.
-    Packed layout: the same tiles, contiguous (= the arena).  pack_map[i]
-    gives the source tile of packed tile i; unpack_map is the inverse.
+    Source pool layout: leaves concatenated in declaration order, each
+    padded to a TILE multiple.  Packed layout: tiles in ARENA order — when a
+    ``layout`` is given, the destination ordering is derived from the real
+    arena slot offsets (the requestList), not assumed to be the declaration
+    order.  pack_map[i] gives the source tile of packed tile i; unpack_map
+    is the inverse permutation.
     """
-    sizes = [int(np.prod(s)) for s in shapes]
-    n_tiles = sum(_pad_len(s) // TILE for s in sizes)
-    pack_map = np.arange(n_tiles, dtype=np.int32)  # identity: pool is ordered
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    tiles_per = [_pad_len(s) // TILE for s in sizes]
+    n_tiles = sum(tiles_per)
+    src_start = np.concatenate([[0], np.cumsum(tiles_per)]).astype(np.int64)
+    if layout is not None:
+        if len(layout.slots) != len(shapes):
+            raise ValueError("layout does not match leaf shapes")
+        # destination order = arena order: offsets are per-BUCKET cursors,
+        # so bucket must lead the key or multi-dtype layouts would
+        # interleave colliding offsets across buckets
+        order = sorted(range(len(shapes)),
+                       key=lambda i: (layout.slots[i].bucket,
+                                      layout.slots[i].offset))
+    else:
+        order = range(len(shapes))
+    pack_map = np.concatenate(
+        [np.arange(src_start[i], src_start[i] + tiles_per[i])
+         for i in order]).astype(np.int32) if n_tiles else \
+        np.zeros((0,), np.int32)
     unpack_map = np.argsort(pack_map).astype(np.int32)
     return pack_map, unpack_map, n_tiles
 
@@ -69,15 +92,20 @@ def pack_pool(pool: jax.Array, tile_map: jax.Array, interpret: bool = False
 
 
 def pack_tree(tree: Any, *, interpret: bool = True) -> Tuple[jax.Array, Any]:
-    """Marshal a (single-dtype) pytree into one contiguous buffer."""
+    """Marshal a (single-dtype) pytree into one contiguous buffer.
+
+    The tile map is derived from the arena plan (requestList) for the tree
+    at TILE alignment — the kernel packs into the same slot ordering the
+    arena engine uses, instead of assuming declaration order."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     dtype = leaves[0].dtype
     shapes = [l.shape for l in leaves]
-    pack_map, unpack_map, _ = build_tile_maps(shapes)
+    layout = engine_lib.cached_plan(tree, align_elems=TILE)
+    pack_map, unpack_map, _ = build_tile_maps(shapes, layout=layout)
     pool = flatten_to_pool(leaves, dtype)
     packed = pack_pool(pool, jnp.asarray(pack_map), interpret=interpret)
     meta = {"treedef": treedef, "shapes": shapes, "dtype": dtype,
-            "unpack_map": jnp.asarray(unpack_map)}
+            "layout": layout, "unpack_map": jnp.asarray(unpack_map)}
     return packed, meta
 
 

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from ..core import arena as arena_lib
+from ..core import engine as engine_lib
 from ..models.registry import ModelApi
 from ..optim.optimizers import Optimizer
 from ..optim import compression
@@ -121,7 +121,11 @@ def make_dp_train_step(api: ModelApi, optimizer: Optimizer,
         if grad_scheme == "pertensor":
             return (jax.tree_util.tree_map(
                 lambda g: jax.lax.psum(g, axis), grads), error_state)
-        buffers, layout = arena_lib.pack(grads, align_elems=128)
+        # gradient arena via the persistent engine: the layout is planned
+        # once per treedef (cache shared with the transfer schemes) and the
+        # pack/unpack lower to one fused scatter/gather region per bucket.
+        layout = engine_lib.cached_plan(grads, align_elems=128)
+        buffers = engine_lib.pack_traced(grads, layout)
         if compress:
             # exact shared-scale int8 all-reduce with error feedback:
             # 1) agree on per-chunk scale via a (tiny) max-psum;
@@ -147,9 +151,9 @@ def make_dp_train_step(api: ModelApi, optimizer: Optimizer,
                 out = (qsum.astype(jnp.float32) * scale[:, None]).reshape(-1)
                 synced[bucket] = out[:n].astype(buf.dtype)
                 new_err[bucket] = (chunks - q * scale[:, None]).reshape(-1)
-            return arena_lib.unpack(synced, layout), new_err
+            return engine_lib.unpack_traced(synced, layout), new_err
         synced = {b: jax.lax.psum(buf, axis) for b, buf in buffers.items()}
-        return arena_lib.unpack(synced, layout), error_state
+        return engine_lib.unpack_traced(synced, layout), error_state
 
     def step_fn(state, batch, error_state):
         params = state["params"]
@@ -189,8 +193,8 @@ def init_error_state(api: ModelApi, compress: bool) -> Dict[str, Any]:
     if not compress:
         return {}
     params = api.abstract()
-    # gradients carry the parameter dtype
-    layout = arena_lib.plan(params, align_elems=128)
+    # gradients carry the parameter dtype; same cached plan the dp step uses
+    layout = engine_lib.cached_plan(params, align_elems=128)
     pad = lambda n: -(-n // compression.CHUNK) * compression.CHUNK
     return {b: jnp.zeros((pad(n),), jnp.float32)
             for b, n in layout.bucket_sizes.items()}

@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (datasize_dense, datasize_linear, pack, plan, repack_into,
                         unpack)
@@ -88,30 +87,5 @@ def test_repack_into_scatter():
     np.testing.assert_allclose(np.asarray(out["b"]), 3.0)
 
 
-@st.composite
-def random_pytree(draw):
-    n_leaves = draw(st.integers(1, 6))
-    leaves = {}
-    for i in range(n_leaves):
-        shape = tuple(draw(st.lists(st.integers(1, 4), min_size=0, max_size=3)))
-        dtype = draw(st.sampled_from([np.float32, np.int32, np.int16]))
-        leaves[f"leaf{i}"] = (shape, dtype)
-    return leaves
-
-
-@given(random_pytree(), st.sampled_from([1, 8, 128]))
-@settings(max_examples=30, deadline=None)
-def test_property_pack_unpack_identity(spec, align):
-    rng = np.random.default_rng(42)
-    tree = {k: jnp.asarray((rng.standard_normal(shape) * 10).astype(dt))
-            for k, (shape, dt) in spec.items()}
-    bufs, layout = pack(tree, align_elems=align)
-    out = unpack(bufs, layout)
-    for x, y in zip(jax.tree_util.tree_leaves(tree),
-                    jax.tree_util.tree_leaves(out)):
-        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
-    # total bytes >= payload bytes; equal when align==1
-    if align == 1:
-        assert layout.total_bytes() == layout.payload_bytes()
-    else:
-        assert layout.total_bytes() >= layout.payload_bytes()
+# property-based pack/unpack identity lives in test_arena_properties.py,
+# behind pytest.importorskip("hypothesis") so collection never fails.

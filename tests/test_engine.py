@@ -1,0 +1,229 @@
+"""Arena transfer engine: cached layouts, staging reuse, fused transforms,
+and the ledger invariants the benchmarks rely on (DESIGN.md §4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (MarshalScheme, PointerChainScheme, UVMScheme,
+                        cache_stats, cached_plan, clear_cache, get_entry,
+                        pack, pack_traced, plan, repack_traced, tree_bytes,
+                        unpack, unpack_traced)
+from repro.core import engine as engine_lib
+
+
+@pytest.fixture()
+def tree():
+    return {"sim": {"atoms": {"traits": {"pos": jnp.ones((64, 3)),
+                                         "mom": jnp.ones((64, 3))}},
+                    "box": jnp.ones((8, 8)),
+                    "count": jnp.int32(64)}}
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    clear_cache()
+    yield
+    clear_cache()
+
+
+# ---------------------------------------------------------------- layout cache
+
+def test_layout_cache_hit_across_identical_treedefs(tree):
+    l1 = cached_plan(tree)
+    stats = cache_stats()
+    assert stats == {"hits": 0, "misses": 1}
+    # a DIFFERENT tree object with the same structure/shapes: cache hit,
+    # same layout object
+    other = jax.tree_util.tree_map(lambda x: x * 2, tree)
+    l2 = cached_plan(other)
+    assert l2 is l1
+    assert cache_stats() == {"hits": 1, "misses": 1}
+
+
+def test_layout_cache_miss_on_shape_or_alignment_change(tree):
+    cached_plan(tree)
+    # same treedef, different leaf shape -> different layout
+    other = dict(tree)
+    other["sim"] = dict(tree["sim"], box=jnp.ones((4, 4)))
+    l2 = cached_plan(other)
+    assert l2.bucket_sizes != cached_plan(tree).bucket_sizes
+    # same tree, different alignment -> separate cache point
+    l3 = cached_plan(tree, align_elems=128)
+    assert l3.align_elems == 128
+    assert cache_stats()["misses"] == 3
+
+
+def test_cached_plan_matches_eager_plan(tree):
+    assert cached_plan(tree).slots == plan(tree).slots
+
+
+# ---------------------------------------------------------------- staging reuse
+
+def test_staging_buffers_reused_across_to_device(tree):
+    s = MarshalScheme()
+    s.to_device(tree)
+    entry = s._entry
+    staging_ids = {b: id(buf) for b, buf in entry.staging.items()}
+    for _ in range(3):
+        s.to_device(tree)
+    assert s._entry is entry                      # same cached entry
+    assert {b: id(buf) for b, buf in entry.staging.items()} == staging_ids
+    assert entry.pack_host_calls == 4
+
+
+def test_entry_cache_is_lru_bounded(monkeypatch):
+    monkeypatch.setattr(engine_lib, "ENTRY_CACHE_MAX", 2)
+    for n in (3, 5, 7):
+        get_entry({"x": jnp.ones(n)})
+    assert len(engine_lib._ENTRY_CACHE) == 2
+    # evicted entries are simply re-created on next use
+    e = get_entry({"x": jnp.ones(3)})
+    assert e.layout.bucket_sizes == {"float32": 3}
+
+
+def test_two_schemes_share_engine_state(tree):
+    a, b = MarshalScheme(), MarshalScheme()
+    a.to_device(tree)
+    b.to_device(tree)
+    assert a._entry is b._entry
+
+
+def test_staging_mutation_does_not_corrupt_device_tree(tree):
+    """Sync-before-rewrite discipline (DESIGN.md §4 invariant 3):
+    device_put may zero-copy alias staging, so to_device must synchronize
+    the fused unpack before the next pack_host rewrites the buffers."""
+    s = MarshalScheme()
+    dev1 = s.to_device(tree)
+    # second pack overwrites the same staging buffers with different values
+    other = jax.tree_util.tree_map(lambda x: x * 3, tree)
+    s.to_device(other)
+    np.testing.assert_allclose(
+        np.asarray(dev1["sim"]["atoms"]["traits"]["pos"]), 1.0)
+    # and direct host mutation of staging after to_device must not reach
+    # the already-synchronized device tree either
+    dev2 = s.to_device(tree)
+    for buf in s._entry.staging.values():
+        buf[...] = -1
+    np.testing.assert_allclose(
+        np.asarray(dev2["sim"]["atoms"]["traits"]["pos"]), 1.0)
+
+
+# ---------------------------------------------------------------- ledger
+
+def test_marshal_ledger_unchanged_by_engine(tree):
+    """Seed semantics: ONE DMA per dtype bucket, payload bytes = tree bytes."""
+    s = MarshalScheme()
+    s.to_device(tree)
+    assert s.ledger.h2d_calls == 2               # float32 + int32 buckets
+    assert s.ledger.h2d_bytes == tree_bytes(tree)
+    # steady state moves exactly the same data
+    first = (s.ledger.h2d_bytes, s.ledger.h2d_calls)
+    s.ledger.reset()
+    s.to_device(tree)
+    assert (s.ledger.h2d_bytes, s.ledger.h2d_calls) == first
+
+
+def test_pointerchain_ledger_one_call_per_chain(tree):
+    s = PointerChainScheme()
+    s.to_device(tree, paths=["sim.atoms.traits.pos", "sim.box"])
+    assert s.ledger.h2d_calls == 2
+    assert s.ledger.h2d_bytes == 64 * 3 * 4 + 8 * 8 * 4
+
+
+def test_uvm_ledger_one_call_per_faulted_leaf(tree):
+    s = UVMScheme()
+    dev = s.to_device(tree)
+    assert s.ledger.h2d_calls == 0               # demand paging: nothing yet
+    s.materialize(dev)
+    assert s.ledger.h2d_calls == 4               # one per leaf
+    assert s.ledger.h2d_bytes == tree_bytes(tree)
+
+
+def test_ledger_wall_split(tree):
+    s = MarshalScheme()
+    s.to_device(tree)
+    led = s.ledger
+    assert led.wall_s > 0
+    assert led.wall_s == pytest.approx(led.enqueue_s + led.sync_s)
+
+
+# ---------------------------------------------------------------- fused ops
+
+def test_fused_unpack_roundtrip(tree):
+    entry = get_entry(tree)
+    bufs = entry.pack_host(tree)
+    out = entry.unpack({b: jnp.asarray(v) for b, v in bufs.items()})
+    for x, y in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_fused_matches_reference_pack_unpack(tree):
+    """Engine pack/unpack == the reference arena.pack/arena.unpack."""
+    entry = get_entry(tree)
+    ref_bufs, layout = pack(tree, use_numpy=True)
+    eng_bufs = entry.pack_host(tree)
+    for b in ref_bufs:
+        np.testing.assert_array_equal(ref_bufs[b], eng_bufs[b])
+    ref_tree = unpack(ref_bufs, layout)
+    eng_tree = unpack_traced({b: jnp.asarray(v) for b, v in eng_bufs.items()},
+                             entry.layout)
+    for x, y in zip(jax.tree_util.tree_leaves(ref_tree),
+                    jax.tree_util.tree_leaves(eng_tree)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_pack_device_and_repack_roundtrip(tree):
+    entry = get_entry(tree)
+    bufs = entry.pack_device(tree)
+    out = entry.unpack(bufs)
+    np.testing.assert_allclose(
+        np.asarray(out["sim"]["atoms"]["traits"]["pos"]), 1.0)
+    # fused repack scatters updated leaves over the existing arena
+    new = jax.tree_util.tree_map(lambda x: x * 5, tree)
+    bufs2 = entry.repack(bufs, new)
+    out2 = entry.unpack(bufs2)
+    np.testing.assert_allclose(np.asarray(out2["sim"]["box"]), 5.0)
+    np.testing.assert_allclose(np.asarray(out2["sim"]["atoms"]["traits"]
+                                          ["mom"]), 5.0)
+
+
+def test_traced_transforms_under_jit(tree):
+    """pack/unpack/repack compose inside an outer jit (the train-step path)."""
+    cached_plan(tree, align_elems=128)
+
+    @jax.jit
+    def roundtrip(t):
+        # the plan cache is keyed on shapes only, so it serves tracers too
+        layout = cached_plan(t, align_elems=128)
+        bufs = pack_traced(t, layout)
+        bufs = repack_traced(bufs, layout,
+                             jax.tree_util.tree_map(lambda x: x + 1, t))
+        return unpack_traced(bufs, layout)
+
+    out = roundtrip(tree)
+    np.testing.assert_allclose(
+        np.asarray(out["sim"]["atoms"]["traits"]["pos"]), 2.0)
+    # the plan was served from cache during tracing
+    assert cache_stats()["hits"] >= 1
+
+
+def test_alignment_gaps_stay_zero(tree):
+    entry = get_entry(tree, align_elems=128)
+    bufs = entry.pack_host(tree)
+    lay = entry.layout
+    covered = np.zeros(lay.bucket_sizes["float32"], bool)
+    for slot in lay.slots:
+        if slot.bucket == "float32":
+            covered[slot.offset:slot.offset + slot.size] = True
+    np.testing.assert_array_equal(bufs["float32"][~covered], 0.0)
+
+
+def test_marshal_roundtrip_through_engine(tree):
+    s = MarshalScheme(align_elems=64)
+    dev = s.to_device(tree)
+    back = s.from_device(dev, tree)
+    for x, y in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
