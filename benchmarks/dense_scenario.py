@@ -3,7 +3,9 @@
 The kernel touches ONE chained leaf (a0->Lnext[q-1].Lnext[q-1].Lnext[q-1].A).
 Marshalling must move the entire q^3 tree + fix every pointer; UVM faults
 only the pages the dereference walk touches; pointerchain moves exactly the
-target array — reproducing the paper's orders-of-magnitude spread.
+target array — reproducing the paper's orders-of-magnitude spread.  Cells
+come from the ``repro.scenarios`` registry (``dense_case``), which also
+declares the Eq.-3 data-motion expectations every run is checked against.
 """
 from __future__ import annotations
 
@@ -11,11 +13,7 @@ import sys
 from typing import List
 
 from repro.core import make_scheme
-
-from .scenarios import (dense_chain, dense_tree, dense_uvm_access_set,
-                        run_algorithm2)
-
-SCHEMES = ("uvm", "marshal", "pointerchain")
+from repro.scenarios import SCHEME_NAMES, dense_case, run_scenario
 
 
 def run(qs=(4, 8), ns=(10**3, 10**4), depth=3, out=sys.stdout,
@@ -25,17 +23,19 @@ def run(qs=(4, 8), ns=(10**3, 10**4), depth=3, out=sys.stdout,
           "norm_wall_vs_uvm", file=out)
     for q in qs:
         for n in ns:
-            tree = dense_tree(q, n, depth)
-            used = [dense_chain(q, depth)]
-            uvm_access = dense_uvm_access_set(q, depth)
+            sc = dense_case(q, n, depth)
+            tree = sc.build()
             base = None
-            for scheme in SCHEMES:
+            for scheme in SCHEME_NAMES:
                 best = None
                 inst = make_scheme(scheme)  # reused across repeats
                 for _ in range(repeats):
-                    m = run_algorithm2(tree, used, scheme,
-                                       uvm_access=uvm_access, scheme=inst)
+                    m = run_scenario(sc, scheme, scheme=inst, tree=tree)
                     assert m.ok, f"check failed: {scheme} q={q} n={n}"
+                    assert m.motion_ok, (
+                        f"data motion off expectation: {scheme} q={q} n={n}: "
+                        f"got ({m.h2d_bytes}, {m.h2d_calls}), "
+                        f"want {m.expected.as_tuple()}")
                     if best is None or m.wall_us < best.wall_us:
                         best = m
                 if scheme == "uvm":

@@ -23,8 +23,8 @@ import jax.numpy as jnp
 
 from repro.core import TreePath, declare, extract
 from repro.launch.hlo_analysis import hlo_line_count
-from .scenarios import (dense_chain, dense_tree, linear_chain, linear_tree,
-                        linear_used_paths)
+from repro.scenarios import (dense_chain, dense_tree, linear_chain,
+                             linear_tree, linear_used_paths)
 from .timer import bench
 
 _SCALE = 1.0001

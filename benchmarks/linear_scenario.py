@@ -1,8 +1,10 @@
 """Linear scenario (paper §4.1, Figs. 5-6): nesting depth vs. transfer scheme.
 
-Sweeps k (chain depth) x n (payload) x layout x scheme; reports wall-clock
-and kernel time normalized to UVM (the paper's presentation) plus the data
-motion each scheme issued.  CSV: one row per cell.
+Sweeps k (chain depth) x n (payload) x layout x scheme over cells built by
+the ``repro.scenarios`` registry (``linear_case`` is the single source of
+truth for builders, used paths and analytic expectations); reports
+wall-clock and kernel time normalized to UVM (the paper's presentation)
+plus the data motion each scheme issued.  CSV: one row per cell.
 """
 from __future__ import annotations
 
@@ -10,31 +12,30 @@ import sys
 from typing import List
 
 from repro.core import make_scheme
-
-from .scenarios import (Measurement, linear_tree, linear_used_paths,
-                        run_algorithm2)
-
-SCHEMES = ("uvm", "marshal", "pointerchain")
-LAYOUTS = ("allinit-allused", "allinit-LLused", "LLinit-LLused")
+from repro.scenarios import LINEAR_LAYOUTS, SCHEME_NAMES, linear_case, run_scenario
 
 
-def run(ks=(2, 6, 10), ns=(10**3, 10**5), layouts=LAYOUTS, out=sys.stdout,
-        repeats: int = 3) -> List[dict]:
+def run(ks=(2, 6, 10), ns=(10**3, 10**5), layouts=LINEAR_LAYOUTS,
+        out=sys.stdout, repeats: int = 3) -> List[dict]:
     rows = []
     print("scenario,k,n,layout,scheme,wall_us,kernel_us,"
           "h2d_bytes,h2d_calls,norm_wall_vs_uvm", file=out)
     for k in ks:
         for n in ns:
             for layout in layouts:
-                tree = linear_tree(k, n, layout)
-                used = linear_used_paths(k, layout)
+                sc = linear_case(k, n, layout)
+                tree = sc.build()
                 base = None
-                for scheme in SCHEMES:
+                for scheme in SCHEME_NAMES:
                     best = None
                     inst = make_scheme(scheme)  # reused across repeats
                     for _ in range(repeats):
-                        m = run_algorithm2(tree, used, scheme, scheme=inst)
+                        m = run_scenario(sc, scheme, scheme=inst, tree=tree)
                         assert m.ok, f"check failed: {scheme} k={k} n={n}"
+                        assert m.motion_ok, (
+                            f"data motion off expectation: {scheme} k={k} "
+                            f"n={n}: got ({m.h2d_bytes}, {m.h2d_calls}), "
+                            f"want {m.expected.as_tuple()}")
                         if best is None or m.wall_us < best.wall_us:
                             best = m
                     if scheme == "uvm":

@@ -2,21 +2,25 @@
 
     PYTHONPATH=src python -m benchmarks.run            # full suite
     PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized sweep
+    PYTHONPATH=src python -m benchmarks.run --smoke    # registry smoke only
 
 Sections (paper artifact -> module):
     datasize            Eq. 1-3 / Tables 1-2     benchmarks.datasize
     linear              §4.1 / Figs. 5-6         benchmarks.linear_scenario
     dense               §4.2 / Fig. 7            benchmarks.dense_scenario
-    transfer            arena-engine steady state benchmarks.transfer_steady
+    transfer            registry x scheme steady state benchmarks.transfer_steady
     instructions        §6.3 / Tables 3-4        benchmarks.instruction_count
     marshal_kernel      Alg. 1 as a TPU kernel   benchmarks (inline)
     checkpoint          marshalled ckpt I/O      benchmarks.checkpoint_bench
     collective_fusion   arena-fused psums        benchmarks.collective_fusion
     roofline            §Roofline summary        benchmarks.roofline
 
-The transfer section additionally writes ``BENCH_transfer.json`` (repo
-root): scheme x scenario x {first_wall_us, cached_wall_us, h2d_bytes,
-h2d_calls, enqueue_us, sync_us} — the machine-readable perf trajectory.
+The transfer section iterates the full ``repro.scenarios`` registry and
+writes ``BENCH_transfer.json`` (repo root): scheme x scenario x
+{first_wall_us, cached_wall_us, h2d_bytes, h2d_calls, enqueue_us, sync_us}
+— the machine-readable perf trajectory.  ``--smoke`` runs ONLY the
+registry sweep at tiny sizes (benchmarks.smoke) and fails on any value- or
+data-motion-check mismatch: the CI harness-breakage canary.
 """
 from __future__ import annotations
 
@@ -33,11 +37,21 @@ def _section(name):
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="registry x scheme sweep at tiny sizes, then exit "
+                         "(fails on check/data-motion mismatches)")
     ap.add_argument("--skip", default="",
                     help="comma-separated section names to skip")
     args = ap.parse_args(argv)
     skip = set(filter(None, args.skip.split(",")))
     t0 = time.time()
+
+    if args.smoke:
+        _section("scenario registry smoke (all scenarios x all schemes)")
+        from . import smoke
+        smoke.run()
+        print(f"\n[benchmarks.run] done in {time.time() - t0:.1f}s")
+        return
 
     if "datasize" not in skip:
         _section("datasize (Eq. 1-3, Tables 1-2)")

@@ -1,0 +1,47 @@
+"""Registry smoke sweep: every scenario x every scheme at tiny sizes.
+
+``python -m benchmarks.run --smoke`` — the CI job that catches harness
+breakage (a scenario that stops building, a scheme whose data motion
+drifts off its analytic expectation, a check that goes vacuous) without
+waiting for someone to regenerate BENCH_transfer.json.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import List
+
+from repro.scenarios import SCHEME_NAMES, iter_scenarios, run_scenario
+
+
+def run(out=sys.stdout, size: str = "smoke") -> List[dict]:
+    rows: List[dict] = []
+    failures: List[str] = []
+    print("scenario,scheme,wall_us,h2d_bytes,h2d_calls,check,motion", file=out)
+    t0 = time.time()
+    for sc in iter_scenarios(size):
+        tree = sc.build()
+        sc.validate(tree)
+        for name in SCHEME_NAMES:
+            m = run_scenario(sc, name, tree=tree)
+            rows.append(dict(scenario=sc.name, scheme=name,
+                             wall_us=round(m.wall_us, 1),
+                             h2d_bytes=m.h2d_bytes, h2d_calls=m.h2d_calls,
+                             ok=m.ok, motion_ok=m.motion_ok))
+            print(f"{sc.name},{name},{m.wall_us:.1f},{m.h2d_bytes},"
+                  f"{m.h2d_calls},{'ok' if m.ok else 'FAIL'},"
+                  f"{'ok' if m.motion_ok else 'FAIL'}", file=out)
+            if not m.ok:
+                failures.append(f"{sc.name}/{name}: value check failed")
+            if not m.motion_ok:
+                failures.append(
+                    f"{sc.name}/{name}: motion ({m.h2d_bytes}, {m.h2d_calls})"
+                    f" != expected {m.expected.as_tuple()}")
+    print(f"[smoke] {len(rows)} cells in {time.time() - t0:.1f}s", file=out)
+    if failures:
+        raise SystemExit("[smoke] FAILURES:\n  " + "\n  ".join(failures))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -2,76 +2,61 @@
 
 The arena engine's claim is that the transfer *plan* is reusable metadata:
 the first ``to_device`` for a tree shape pays plan + staging-alloc + compile,
-every later call is pure data motion.  This section measures both, per
-scheme x scenario, and (via ``benchmarks.run``) persists the rows to
+every later call is pure data motion.  This section measures both over the
+ENTIRE ``repro.scenarios`` registry — one row per scheme x registered
+scenario — and (via ``benchmarks.run``) persists the rows to
 ``BENCH_transfer.json`` so the perf trajectory is trackable across PRs.
 
-Ledger invariants are reported alongside: batching changes *when* we
-synchronize, never how many bytes / DMA batches move.
+Every row's ``h2d_bytes``/``h2d_calls`` is asserted against the scenario's
+analytic expectation (DESIGN.md §4 invariant 4 makes these exact): a scheme
+that silently changes its data motion fails the benchmark, not just a test.
 """
 from __future__ import annotations
 
 import json
 import sys
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 
 from repro.core import make_scheme
-
-from .scenarios import (dense_chain, dense_tree, dense_uvm_access_set,
-                        linear_tree, linear_used_paths)
-
-SCHEMES = ("uvm", "marshal", "pointerchain")
+from repro.scenarios import SCHEME_NAMES, Scenario, iter_scenarios
 
 
-def _scenarios(quick: bool = False) -> Dict[str, Dict[str, Any]]:
-    out = {
-        "dense_q4_n1e3": dict(
-            tree=dense_tree(4, 10**3, 3),
-            paths=[dense_chain(4, 3)],
-            uvm_access=dense_uvm_access_set(4, 3)),
-        "linear_k6_n1e3": dict(
-            tree=linear_tree(6, 10**3, "allinit-allused"),
-            paths=linear_used_paths(6, "allinit-allused"),
-            uvm_access=None),
-    }
-    if not quick:
-        out["dense_q8_n1e3"] = dict(
-            tree=dense_tree(8, 10**3, 3),
-            paths=[dense_chain(8, 3)],
-            uvm_access=dense_uvm_access_set(8, 3))
-    return out
+def _one_transfer(scheme, sc: Scenario, tree: Any) -> float:
+    """One full H2D pass under the scheme's policy; returns wall seconds.
 
-
-def _one_transfer(scheme, name: str, tree, paths, uvm_access) -> float:
-    """One full H2D pass under the scheme's policy; returns wall seconds."""
+    ``declare_refs=False``: the kernel's chain resolution is not data
+    motion, so it stays out of the steady-state timing.
+    """
     t0 = time.perf_counter()
-    if name == "uvm":
-        dev = scheme.to_device(tree)
-        dev = scheme.materialize(dev, paths=uvm_access or paths)
-    elif name == "pointerchain":
-        dev = scheme.to_device(tree, paths=paths)
-    else:
-        dev = scheme.to_device(tree)
+    dev, _ = scheme.stage(tree, list(sc.used_paths),
+                          uvm_access=list(sc.uvm_access)
+                          if sc.uvm_access else None,
+                          declare_refs=False)
     jax.block_until_ready(dev)
     return time.perf_counter() - t0
 
 
 def run(out=sys.stdout, repeats: int = 5, quick: bool = False,
-        json_path: Optional[str] = None) -> List[dict]:
+        json_path: Optional[str] = None, size: Optional[str] = None) -> List[dict]:
+    size = size or ("quick" if quick else "full")
     rows: List[dict] = []
     print("scenario,scheme,first_wall_us,cached_wall_us,speedup,"
           "h2d_bytes,h2d_calls,enqueue_us,sync_us", file=out)
-    for scen, spec in _scenarios(quick).items():
-        tree, paths, uvm_access = spec["tree"], spec["paths"], spec["uvm_access"]
-        for name in SCHEMES:
+    for sc in iter_scenarios(size):
+        tree = sc.build()
+        for name in SCHEME_NAMES:
             scheme = make_scheme(name)
-            first_us = _one_transfer(scheme, name, tree, paths,
-                                     uvm_access) * 1e6
+            first_us = _one_transfer(scheme, sc, tree) * 1e6
             h2d_bytes, h2d_calls = (scheme.ledger.h2d_bytes,
                                     scheme.ledger.h2d_calls)
+            expected = sc.expected_motion(
+                name, tree, align_elems=getattr(scheme, "align_elems", 1))
+            assert (h2d_bytes, h2d_calls) == expected.as_tuple(), (
+                f"{sc.name}/{name}: ledger ({h2d_bytes}, {h2d_calls}) != "
+                f"analytic expectation {expected.as_tuple()}")
             cached, enq, syn = [], [], []
             for _ in range(repeats):
                 if name == "uvm":
@@ -79,13 +64,12 @@ def run(out=sys.stdout, repeats: int = 5, quick: bool = False,
                     # re-faults, so "cached" only measures batching gains
                     scheme = make_scheme(name)
                 scheme.ledger.reset()
-                cached.append(_one_transfer(scheme, name, tree, paths,
-                                            uvm_access) * 1e6)
+                cached.append(_one_transfer(scheme, sc, tree) * 1e6)
                 enq.append(scheme.ledger.enqueue_s * 1e6)
                 syn.append(scheme.ledger.sync_s * 1e6)
             cached_us = min(cached)
             i = cached.index(cached_us)
-            row = dict(scenario=scen, scheme=name,
+            row = dict(scenario=sc.name, family=sc.family, scheme=name,
                        first_wall_us=round(first_us, 1),
                        cached_wall_us=round(cached_us, 1),
                        speedup=round(first_us / cached_us, 2),

@@ -7,13 +7,9 @@ transfer schemes, printing Algorithm-2 wall time, kernel time and the exact
 data motion each scheme issued — the paper's Figures 5-7 at one data point.
 """
 import argparse
-import sys
 
-sys.path.insert(0, ".")
-
-from benchmarks.scenarios import (dense_chain, dense_tree,
-                                  dense_uvm_access_set, linear_tree,
-                                  linear_used_paths, run_algorithm2)
+from repro.scenarios import (dense_chain, dense_tree, dense_uvm_access_set,
+                             linear_tree, linear_used_paths, run_algorithm2)
 
 
 def main():

@@ -84,6 +84,25 @@ class TransferScheme:
                     paths: Optional[Sequence[Union[str, TreePath]]] = None) -> Any:
         raise NotImplementedError
 
+    def stage(self, tree: Any, used_paths: Sequence[Union[str, TreePath]],
+              uvm_access: Optional[Sequence[Union[str, TreePath]]] = None,
+              declare_refs: bool = True) -> tuple:
+        """Algorithm-2 transfer step under this scheme's policy.
+
+        Returns ``(device_tree, refs)`` where ``refs`` are the ChainRefs of
+        the kernel's declared leaves in ``device_tree``.  The scenario
+        driver (``repro.scenarios.driver``) is scheme-agnostic because each
+        scheme owns its staging policy here instead of being a branch of an
+        if/elif ladder in the harness.  The default covers eager whole-tree
+        movers (marshalling); ``uvm_access`` is ignored by schemes without
+        an on-access concept.  Transfer-only callers (steady-state timing
+        loops) pass ``declare_refs=False`` to keep the chain-resolution
+        walk out of the measured region; schemes that must declare to move
+        (pointerchain) return their refs regardless.
+        """
+        dev = self.to_device(tree)
+        return dev, (declare(tree, *used_paths) if declare_refs else ())
+
     def _put(self, x: Any) -> Any:
         return self._put_batch([x])[0]
 
@@ -197,6 +216,13 @@ class UVMScheme(TransferScheme):
             out = tp.set(out, node)
         return out
 
+    def stage(self, tree, used_paths, uvm_access=None, declare_refs=True):
+        # demand paging: wrap lazily, then the access walk (the declared
+        # access set, or the kernel's own chains) triggers the faults.
+        dev = self.to_device(tree)
+        dev = self.materialize(dev, paths=list(uvm_access or used_paths))
+        return dev, (declare(tree, *used_paths) if declare_refs else ())
+
     def from_device(self, device_tree, host_tree, paths=None):
         # demand paging back: every device leaf is its own granule, but the
         # fetch burst is enqueued together and synchronized once.
@@ -294,6 +320,14 @@ class PointerChainScheme(TransferScheme):
         # one enqueue per declared chain, ONE sync for the whole declare set
         dev_leaves = self._put_batch(leaves)
         return insert(tree, self.refs, dev_leaves)
+
+    def stage(self, tree, used_paths, uvm_access=None, declare_refs=True):
+        # selective deep copy: ONLY the declared chains move; the refs were
+        # resolved by to_device's declare (a required part of the transfer,
+        # so they are returned even for transfer-only callers) and index
+        # the same treedef.
+        dev = self.to_device(tree, paths=list(used_paths))
+        return dev, self.refs
 
     def extract_leaves(self, tree: Any) -> list[Any]:
         return extract(tree, self.refs)

@@ -1,0 +1,191 @@
+"""Scenario subsystem core: the dataclass, the registry, and the analytic
+data-motion expectations every scheme is differentially tested against.
+
+The paper frames its microbenchmarks as "a basis to examine the efficiency
+of upcoming approaches" to deep copy; the seed repo hardcoded exactly two
+of them.  Here a scenario is *data*, not code (LLAMA's decoupling of the
+logical structure from its memory layout, arXiv 2106.04284): a
+:class:`Scenario` declares the tree builder, the pointer chains the kernel
+dereferences (``used_paths``), the pages a demand-paging scheme would fault
+(``uvm_access``), and — because DESIGN.md §4 invariant 4 makes ledger
+counts batching-invariant — the **exact** bytes/DMA-batch counts each
+transfer scheme must issue (:class:`Motion`).
+
+Families register themselves with the :func:`register` decorator; every
+benchmark entry point and the differential test harness iterate
+:func:`iter_scenarios` instead of forking the driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import arena, declare, extract
+
+SIZE_PRESETS = ("smoke", "quick", "full")
+SCHEME_NAMES = ("uvm", "marshal", "pointerchain")
+
+
+@dataclasses.dataclass(frozen=True)
+class Motion:
+    """Expected H2D data motion of one Algorithm-2 transfer step."""
+
+    h2d_bytes: int
+    h2d_calls: int
+
+    def as_tuple(self) -> Tuple[int, int]:
+        return (self.h2d_bytes, self.h2d_calls)
+
+
+def _nbytes(x: Any) -> int:
+    return int(x.nbytes) if hasattr(x, "nbytes") else int(np.asarray(x).nbytes)
+
+
+def derive_motion(tree: Any, used_paths: Sequence[str],
+                  uvm_access: Optional[Sequence[str]], scheme_name: str,
+                  align_elems: int = 1) -> Motion:
+    """Structural derivation of the expected data motion (no transfers run).
+
+    * marshal       — Alg. 1 moves every dtype bucket once: bytes =
+                      ``determineTotalBytes`` (the arena plan's bucket
+                      bytes), calls = number of dtype buckets.
+    * pointerchain  — one DMA per declared chain (interior chains expand to
+                      their leaves), bytes = the extracted leaves.
+    * uvm           — one fault per distinct leaf under the access set
+                      (``uvm_access`` if declared, else ``used_paths``).
+
+    This is the second, independent source the differential tests compare
+    the ledger against; families with closed-form paper expectations
+    (linear Eq. 1-2, dense Eq. 3) provide a third via ``Scenario.expected``.
+    """
+    if scheme_name == "marshal":
+        layout = arena.plan(tree, align_elems)
+        return Motion(sum(layout.bucket_bytes().values()),
+                      len(layout.bucket_sizes))
+    if scheme_name == "pointerchain":
+        refs = declare(tree, *used_paths)
+        return Motion(sum(_nbytes(l) for l in extract(tree, refs)), len(refs))
+    if scheme_name == "uvm":
+        refs = declare(tree, *(uvm_access or used_paths))
+        import jax
+
+        leaves = jax.tree_util.tree_leaves(tree)
+        faulted = sorted({r.flat_index for r in refs})
+        return Motion(sum(_nbytes(leaves[i]) for i in faulted), len(faulted))
+    raise KeyError(f"unknown scheme {scheme_name!r}; options: {SCHEME_NAMES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One concrete workload cell of the benchmark/test matrix.
+
+    ``build`` must be deterministic (seeded) so the analytic expectations
+    stay exact across calls.  ``used_paths`` are the pointer chains the
+    Algorithm-2 kernel dereferences; they must resolve to (or expand to)
+    float leaves, since the kernel scales them.  ``uvm_access`` — the pages
+    a demand-paging walk touches — must cover ``used_paths``; ``None``
+    means the kernel's own chains are the access set.  ``expected`` holds
+    optional closed-form per-scheme :class:`Motion` overrides (the paper's
+    Eq. 1-3 families declare them; new families may rely on the structural
+    derivation).
+    """
+
+    name: str
+    family: str
+    build: Callable[[], Any]
+    used_paths: Tuple[str, ...]
+    uvm_access: Optional[Tuple[str, ...]] = None
+    expected: Optional[Mapping[str, Motion]] = None
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def expected_motion(self, scheme_name: str, tree: Any = None,
+                        align_elems: int = 1) -> Motion:
+        """Closed-form expectation if declared, else structural derivation.
+
+        The closed forms assume the schemes' default tight packing; a
+        scheme with ``align_elems > 1`` pads marshalling buckets, so such
+        calls always fall through to the structural derivation.
+        """
+        if align_elems == 1 and self.expected and scheme_name in self.expected:
+            return self.expected[scheme_name]
+        if tree is None:
+            tree = self.build()
+        return derive_motion(tree, self.used_paths, self.uvm_access,
+                             scheme_name, align_elems)
+
+    def validate(self, tree: Any = None) -> None:
+        """Check the scenario contract (DESIGN.md §6) on the built tree."""
+        import jax
+
+        if tree is None:
+            tree = self.build()
+        used = declare(tree, *self.used_paths)
+        leaves = jax.tree_util.tree_leaves(tree)
+        for r in used:
+            dt = np.asarray(leaves[r.flat_index]).dtype
+            if dt.kind in "iub":
+                raise ValueError(
+                    f"{self.name}: used path {r.path} resolves to {dt} — the "
+                    "Algorithm-2 kernel scales used leaves, so they must be "
+                    "floating point")
+        if self.uvm_access is not None:
+            access = {r.flat_index for r in declare(tree, *self.uvm_access)}
+            missing = [str(r.path) for r in used
+                       if r.flat_index not in access]
+            if missing:
+                raise ValueError(
+                    f"{self.name}: uvm_access does not cover used chains "
+                    f"{missing} — UVM could not extract them for the kernel")
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+FamilyFn = Callable[[str], List[Scenario]]
+_REGISTRY: Dict[str, FamilyFn] = {}
+
+
+def register(name: str) -> Callable[[FamilyFn], FamilyFn]:
+    """Decorator: register ``fn(size_preset) -> [Scenario, ...]`` as a family."""
+
+    def deco(fn: FamilyFn) -> FamilyFn:
+        if name in _REGISTRY:
+            raise ValueError(f"scenario family {name!r} already registered")
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def family_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def get_family(name: str) -> FamilyFn:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario family {name!r}; "
+                       f"options: {sorted(_REGISTRY)}")
+
+
+def iter_scenarios(size: str = "quick",
+                   only: Optional[Iterable[str]] = None) -> List[Scenario]:
+    """Every registered scenario at the given size preset, in registration
+    order.  ``only`` restricts to the named families."""
+    if size not in SIZE_PRESETS:
+        raise KeyError(f"unknown size preset {size!r}; options: {SIZE_PRESETS}")
+    names = list(_REGISTRY) if only is None else list(only)
+    out: List[Scenario] = []
+    for fam in names:
+        out.extend(get_family(fam)(size))
+    seen: Dict[str, str] = {}
+    for sc in out:
+        if sc.name in seen:
+            raise ValueError(f"duplicate scenario name {sc.name!r} "
+                             f"(families {seen[sc.name]} and {sc.family})")
+        seen[sc.name] = sc.family
+    return out

@@ -1,0 +1,215 @@
+"""Differential scheme-correctness harness over the scenario registry.
+
+Every registered scenario runs under every transfer scheme and is checked
+against independent sources of truth:
+
+  * a ``copy.deepcopy`` host reference — the round-tripped tree must match
+    it leaf-for-leaf (transfer must not lose, reorder, or retype data);
+  * the structural derivation of expected data motion (``derive_motion``);
+  * for the paper's linear/dense families, the closed-form Eq. 1-3
+    expectations declared on the scenario (three-way differential).
+
+Plus the satellite regressions: the Algorithm-2 line-7 check must actually
+discriminate (a deliberately-corrupting scheme fails it), and the marshal
+staging buffers must honor the sync-before-rewrite aliasing invariant
+(DESIGN.md §4 invariant 3).
+"""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import scenarios as S
+from repro.core import MarshalScheme, extract, insert, make_scheme
+
+SCHEMES = S.SCHEME_NAMES
+_SMOKE = S.iter_scenarios("smoke")
+_IDS = [sc.name for sc in _SMOKE]
+_CELLS = [(sc, scheme) for sc in _SMOKE for scheme in SCHEMES]
+_CELL_IDS = [f"{sc.name}-{scheme}" for sc, scheme in _CELLS]
+
+
+@pytest.fixture(scope="module")
+def trees():
+    """One deterministic host tree per scenario, shared across the module."""
+    return {sc.name: sc.build() for sc in _SMOKE}
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_covers_required_families():
+    assert set(S.family_names()) >= {"linear", "dense", "ragged", "mixed_dtype",
+                                 "sweep", "model_state"}
+    full = S.iter_scenarios("full")
+    assert len(full) >= 8
+    assert len({sc.name for sc in full}) == len(full)   # unique names
+    # the paper's three linear layouts are all present
+    layouts = {sc.params["layout"] for sc in full if sc.family == "linear"}
+    assert layouts == set(S.LINEAR_LAYOUTS)
+
+
+@pytest.mark.parametrize("sc", _SMOKE, ids=_IDS)
+def test_scenario_contract_validates(sc, trees):
+    sc.validate(trees[sc.name])
+
+
+def test_unknown_family_and_preset_raise():
+    with pytest.raises(KeyError):
+        S.get_family("nope")
+    with pytest.raises(KeyError):
+        S.iter_scenarios("huge")
+
+
+# ------------------------------------------------- differential round-trip
+
+@pytest.mark.parametrize("sc,scheme_name", _CELLS, ids=_CELL_IDS)
+def test_roundtrip_matches_deepcopy_reference(sc, scheme_name, trees):
+    """stage -> from_device must reproduce the deepcopy of the host tree
+    exactly, and the ledger must equal the analytic motion expectation."""
+    tree = trees[sc.name]
+    ref = copy.deepcopy(tree)
+    scheme = make_scheme(scheme_name)
+    dev, _ = scheme.stage(tree, list(sc.used_paths),
+                          uvm_access=list(sc.uvm_access)
+                          if sc.uvm_access else None)
+    host = scheme.from_device(dev, tree)
+    for got, want in zip(jax.tree_util.tree_leaves(host),
+                         jax.tree_util.tree_leaves(ref)):
+        got, want = np.asarray(got), np.asarray(want)
+        assert got.dtype == want.dtype and got.shape == want.shape
+        np.testing.assert_array_equal(got, want)
+    derived = S.derive_motion(tree, sc.used_paths, sc.uvm_access, scheme_name)
+    assert (scheme.ledger.h2d_bytes, scheme.ledger.h2d_calls) \
+        == derived.as_tuple()
+
+
+@pytest.mark.parametrize("sc,scheme_name", _CELLS, ids=_CELL_IDS)
+def test_algorithm2_value_and_motion_checks(sc, scheme_name, trees):
+    m = S.run_scenario(sc, scheme_name, tree=trees[sc.name])
+    assert m.ok, f"Algorithm-2 line-7 check failed for {sc.name}/{scheme_name}"
+    assert m.motion_ok, (
+        f"{sc.name}/{scheme_name}: ledger ({m.h2d_bytes}, {m.h2d_calls}) != "
+        f"analytic expectation {m.expected.as_tuple()}")
+
+
+@pytest.mark.parametrize("sc", [sc for sc in _SMOKE
+                                if sc.expected is not None],
+                         ids=[sc.name for sc in _SMOKE
+                              if sc.expected is not None])
+def test_closed_form_matches_structural_derivation(sc, trees):
+    """The Eq. 1-3 closed forms and the structural walk must agree — the
+    third leg of the differential (DESIGN.md §6)."""
+    tree = trees[sc.name]
+    for scheme_name in SCHEMES:
+        closed = sc.expected[scheme_name]
+        derived = S.derive_motion(tree, sc.used_paths, sc.uvm_access,
+                                  scheme_name)
+        assert closed == derived, (sc.name, scheme_name, closed, derived)
+
+
+# ------------------------------------------- the check must discriminate
+
+class _LeafDroppingMarshal(MarshalScheme):
+    """A broken scheme: marshals correctly, then silently zeroes the first
+    declared leaf — the failure mode a vacuous check would never catch."""
+
+    def stage(self, tree, used_paths, uvm_access=None, declare_refs=True):
+        # refs are needed regardless of declare_refs: the corruption
+        # targets the first declared leaf
+        dev, refs = super().stage(tree, used_paths, uvm_access)
+        leaves = extract(dev, refs)
+        leaves[0] = jnp.zeros_like(leaves[0])
+        return insert(dev, refs, leaves), refs
+
+
+def test_dense_payloads_are_nonzero(trees):
+    """The seed filled dense payloads with np.zeros, making the line-7
+    check (got == want * SCALE) vacuously true for data-dropping schemes."""
+    from repro.core import declare
+
+    dense = next(sc for sc in _SMOKE if sc.family == "dense")
+    tree = trees[dense.name]
+    leaves = jax.tree_util.tree_leaves(tree)
+    for r in declare(tree, *dense.used_paths):
+        assert np.any(np.asarray(leaves[r.flat_index]) != 0.0)
+
+
+@pytest.mark.parametrize("sc", [sc for sc in _SMOKE
+                                if sc.family in ("dense", "linear")],
+                         ids=[sc.name for sc in _SMOKE
+                              if sc.family in ("dense", "linear")])
+def test_corrupting_scheme_fails_the_check(sc, trees):
+    """Differential proof the Algorithm-2 check is no longer vacuous: an
+    honest marshal passes, a leaf-dropping one must fail on the same tree."""
+    tree = trees[sc.name]
+    honest = S.run_scenario(sc, scheme=MarshalScheme(), tree=tree)
+    assert honest.ok
+    broken = S.run_scenario(sc, scheme=_LeafDroppingMarshal(), tree=tree)
+    assert not broken.ok, (
+        f"{sc.name}: a scheme that dropped a leaf passed the check — "
+        "the verification is vacuous")
+
+
+class _StaleBf16Marshal(MarshalScheme):
+    """Returns correct results everywhere EXCEPT the bf16 leaf, which is
+    silently replaced with stale (unscaled) host data."""
+
+    def from_device(self, device_tree, host_tree, paths=None):
+        from repro.core import TreePath
+
+        out = super().from_device(device_tree, host_tree, paths)
+        return TreePath.parse("bf16.w").set(out, host_tree["bf16"]["w"])
+
+
+def test_bf16_check_is_not_vacuous(trees):
+    """With the seed's 1.0001 scale, bf16 * 1.0001 rounded to the identity,
+    so stale bf16 data passed the check; the 1.5 scale must catch it."""
+    sc = next(s for s in _SMOKE if s.family == "mixed_dtype")
+    tree = trees[sc.name]
+    assert S.run_scenario(sc, scheme=MarshalScheme(), tree=tree).ok
+    assert not S.run_scenario(sc, scheme=_StaleBf16Marshal(), tree=tree).ok
+
+
+def test_run_scenario_honors_scheme_alignment(trees):
+    """A MarshalScheme with align_elems > 1 pads its buckets; the motion
+    expectation must be derived at the scheme's alignment (the closed
+    forms assume tight packing and must not be used)."""
+    sc = next(s for s in _SMOKE if s.family == "dense")
+    tree = trees[sc.name]
+    m = S.run_scenario(sc, scheme=MarshalScheme(align_elems=64), tree=tree)
+    assert m.ok and m.motion_ok
+    # the padded buckets really are bigger than the tight-packed closed form
+    assert m.expected.h2d_bytes > sc.expected_motion("marshal", tree).h2d_bytes
+
+
+# ------------------------------------- aliasing invariant (DESIGN.md §4.3)
+
+def test_marshal_sync_before_rewrite_on_scenario_trees(trees):
+    """pack -> to_device -> rewrite staging: values already on device must
+    be unaffected (the XLA CPU zero-copy alias path, DESIGN.md invariant 3),
+    exercised through registry scenarios rather than a hand-built tree."""
+    for sc in _SMOKE:
+        if sc.family not in ("dense", "mixed_dtype"):
+            continue
+        tree = trees[sc.name]
+        want = [np.asarray(l).copy()
+                for l in jax.tree_util.tree_leaves(tree)]
+        s = MarshalScheme()
+        dev1, _ = s.stage(tree, list(sc.used_paths))
+        entry = s._entry
+        # same-shape tree with different values rewrites the SAME staging
+        other = jax.tree_util.tree_map(lambda x: x + np.ones((), x.dtype),
+                                       tree)
+        s.to_device(other)
+        assert s._entry is entry, "rewrite must hit the same cached entry"
+        for got, ref in zip(jax.tree_util.tree_leaves(dev1), want):
+            np.testing.assert_array_equal(np.asarray(got), ref)
+        # direct host mutation of staging after a synced to_device must not
+        # reach the device tree either
+        dev2 = s.to_device(tree)
+        for buf in entry.staging.values():
+            buf[...] = np.asarray(-1).astype(buf.dtype)
+        for got, ref in zip(jax.tree_util.tree_leaves(dev2), want):
+            np.testing.assert_array_equal(np.asarray(got), ref)

@@ -1,0 +1,82 @@
+"""Property-based layout-cache invariant tests over random NESTED pytrees
+(optional: need hypothesis, see requirements-dev.txt; split out so the
+deterministic suite collects without the dependency).
+
+DESIGN.md §4 invariants 1-2 for arbitrary trees of depth <= 4 with mixed
+dtypes: the cached plan is deterministic and value-independent, per-bucket
+offsets are monotone/aligned/non-overlapping, and host pack/unpack is an
+exact round trip.
+"""
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cached_plan, clear_cache, pack, plan, unpack
+
+_DTYPES = (np.float32, np.int32, np.float16)
+_SHAPES = ((), (1,), (3,), (0,), (2, 2), (5,))
+_KEYS = st.sampled_from(list("abcd"))
+
+
+@st.composite
+def nested_tree(draw, depth=4):
+    """Random nested dict pytree, depth <= 4, mixed-dtype array leaves."""
+    if depth == 0 or draw(st.booleans()):
+        dt = draw(st.sampled_from(_DTYPES))
+        shape = draw(st.sampled_from(_SHAPES))
+        seed = draw(st.integers(0, 2**16))
+        rng = np.random.default_rng(seed)
+        return (rng.standard_normal(shape) * 10).astype(dt)
+    n = draw(st.integers(1, 3))
+    ks = draw(st.lists(_KEYS, min_size=n, max_size=n, unique=True))
+    return {k: draw(nested_tree(depth=depth - 1)) for k in ks}
+
+
+@given(nested_tree())
+@settings(max_examples=40, deadline=None)
+def test_property_plan_is_deterministic_and_value_independent(tree):
+    if not isinstance(tree, dict):
+        return
+    clear_cache()
+    l1 = cached_plan(tree)
+    # a different tree object, same shapes/dtypes, different values:
+    # the cache must serve the SAME layout object (key reads no values)
+    other = jax.tree_util.tree_map(lambda x: x + np.ones((), x.dtype), tree)
+    assert cached_plan(other) is l1
+    # and the eager plan is itself deterministic
+    assert plan(tree).slots == plan(tree).slots == l1.slots
+
+
+@given(nested_tree(), st.sampled_from([1, 4, 64]))
+@settings(max_examples=40, deadline=None)
+def test_property_per_bucket_offsets_monotone_aligned(tree, align):
+    if not isinstance(tree, dict):
+        return
+    layout = plan(tree, align_elems=align)
+    cursors = {}
+    for slot in layout.slots:
+        assert slot.offset % align == 0
+        assert slot.offset >= cursors.get(slot.bucket, 0)   # monotone,
+        cursors[slot.bucket] = slot.offset + slot.size      # non-overlapping
+    for bucket, total in layout.bucket_sizes.items():
+        assert cursors[bucket] <= total
+
+
+@given(nested_tree(), st.sampled_from([1, 4, 64]))
+@settings(max_examples=40, deadline=None)
+def test_property_pack_unpack_roundtrip(tree, align):
+    if not isinstance(tree, dict):
+        return
+    bufs, layout = pack(tree, align_elems=align, use_numpy=True)
+    out = unpack(bufs, layout)
+    assert jax.tree_util.tree_structure(out) \
+        == jax.tree_util.tree_structure(tree)
+    for x, y in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_array_equal(x, y)
