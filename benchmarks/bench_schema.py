@@ -1,0 +1,82 @@
+"""BENCH_transfer.json row schema — versioned so trajectories stay comparable.
+
+PRs keep adding columns to the steady-state transfer rows (the delta and
+sharded columns arrived with the incremental/sharded engine); a naive
+reader diffing BENCH_transfer.json across PRs would silently misalign old
+and new rows.  Every row now carries ``"schema": N``; :func:`upgrade_row`
+lifts any older row (including the schema-less v1 rows emitted before this
+module existed) to the current version by filling the later columns with
+their declared defaults, so cross-PR comparison code only ever sees
+current-schema rows.
+
+  v1  (implicit)  scenario, family, scheme, first_wall_us, cached_wall_us,
+                  speedup, h2d_bytes, h2d_calls, enqueue_us, sync_us
+  v2              + schema, skipped_bytes, delta_calls, sharded, n_devices,
+                  per_device_bytes, per_device_calls, steady_wall_us,
+                  steady_h2d_bytes
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional, Tuple
+
+SCHEMA_VERSION = 2
+
+# column -> default, in schema order; upgrading fills what a row lacks.
+V2_DEFAULTS: Dict[str, Any] = {
+    "schema": SCHEMA_VERSION,
+    "family": "",
+    "skipped_bytes": 0,       # delta: bytes proven clean and not moved
+    "delta_calls": 0,         # cached passes that skipped >=1 bucket
+    "sharded": False,
+    "n_devices": 1,
+    "per_device_bytes": None,  # uniform per-device split (sharded rows)
+    "per_device_calls": None,
+    "steady_wall_us": None,    # steady_reuse x delta: per-pass wall
+    "steady_h2d_bytes": None,  # steady_reuse x delta: per-pass dirty bytes
+}
+
+
+def upgrade_row(row: Dict[str, Any]) -> Dict[str, Any]:
+    """Lift a row of ANY past schema to SCHEMA_VERSION (old rows parse)."""
+    version = int(row.get("schema", 1))
+    if version > SCHEMA_VERSION:
+        raise ValueError(f"row schema {version} is newer than this reader "
+                         f"({SCHEMA_VERSION}); update benchmarks/bench_schema.py")
+    out = dict(row)
+    for key, default in V2_DEFAULTS.items():
+        out.setdefault(key, default)
+    return out
+
+
+def load_rows(path: str) -> List[Dict[str, Any]]:
+    """Read BENCH_transfer.json (any schema vintage) as current-schema rows."""
+    with open(path) as f:
+        rows = json.load(f)
+    return [upgrade_row(r) for r in rows]
+
+
+def row_key(row: Dict[str, Any]) -> Tuple[str, str]:
+    """Trajectory identity of a row across PRs."""
+    return (row["scenario"], row["scheme"])
+
+
+def compare(old_rows: List[Dict[str, Any]], new_rows: List[Dict[str, Any]],
+            column: str = "cached_wall_us") -> List[Dict[str, Any]]:
+    """Join two row sets (any schema vintage each) on (scenario, scheme) and
+    report the per-cell trajectory of ``column``; rows that exist on only
+    one side are reported with the other side ``None`` instead of being
+    silently dropped."""
+    old = {row_key(r): upgrade_row(r) for r in old_rows}
+    new = {row_key(r): upgrade_row(r) for r in new_rows}
+    out = []
+    for key in sorted({*old, *new}):
+        a: Optional[Dict] = old.get(key)
+        b: Optional[Dict] = new.get(key)
+        va = a.get(column) if a else None
+        vb = b.get(column) if b else None
+        ratio = (va / vb) if (va and vb) else None
+        out.append({"scenario": key[0], "scheme": key[1],
+                    f"old_{column}": va, f"new_{column}": vb,
+                    "speedup": round(ratio, 2) if ratio else None})
+    return out

@@ -42,7 +42,7 @@ for scheme, compress in (("pertensor", False), ("arena", False),
     step = make_dp_train_step(api, opt, constant(1e-3), mesh,
                               grad_scheme=scheme, compress=compress)
     err_abs = jax.tree_util.tree_map(
-        lambda x: x, init_error_state(api, compress))
+        lambda x: x, init_error_state(api, compress, mesh=mesh))
     lowered = jax.jit(step).lower(state_abs, batch_abs, err_abs)
     stats = collective_stats(lowered.compile().as_text())
     emitted = str(jax.make_jaxpr(step)(state_abs, batch_abs, err_abs)

@@ -13,7 +13,7 @@ import sys
 from typing import List
 
 from repro.core import make_scheme
-from repro.scenarios import SCHEME_NAMES, dense_case, run_scenario
+from repro.scenarios import PAPER_SCHEMES, dense_case, run_scenario
 
 
 def run(qs=(4, 8), ns=(10**3, 10**4), depth=3, out=sys.stdout,
@@ -26,7 +26,7 @@ def run(qs=(4, 8), ns=(10**3, 10**4), depth=3, out=sys.stdout,
             sc = dense_case(q, n, depth)
             tree = sc.build()
             base = None
-            for scheme in SCHEME_NAMES:
+            for scheme in PAPER_SCHEMES:
                 best = None
                 inst = make_scheme(scheme)  # reused across repeats
                 for _ in range(repeats):

@@ -12,7 +12,7 @@ import sys
 from typing import List
 
 from repro.core import make_scheme
-from repro.scenarios import LINEAR_LAYOUTS, SCHEME_NAMES, linear_case, run_scenario
+from repro.scenarios import LINEAR_LAYOUTS, PAPER_SCHEMES, linear_case, run_scenario
 
 
 def run(ks=(2, 6, 10), ns=(10**3, 10**5), layouts=LINEAR_LAYOUTS,
@@ -26,7 +26,7 @@ def run(ks=(2, 6, 10), ns=(10**3, 10**5), layouts=LINEAR_LAYOUTS,
                 sc = linear_case(k, n, layout)
                 tree = sc.build()
                 base = None
-                for scheme in SCHEME_NAMES:
+                for scheme in PAPER_SCHEMES:
                     best = None
                     inst = make_scheme(scheme)  # reused across repeats
                     for _ in range(repeats):

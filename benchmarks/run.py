@@ -16,11 +16,16 @@ Sections (paper artifact -> module):
     roofline            §Roofline summary        benchmarks.roofline
 
 The transfer section iterates the full ``repro.scenarios`` registry and
-writes ``BENCH_transfer.json`` (repo root): scheme x scenario x
-{first_wall_us, cached_wall_us, h2d_bytes, h2d_calls, enqueue_us, sync_us}
-— the machine-readable perf trajectory.  ``--smoke`` runs ONLY the
-registry sweep at tiny sizes (benchmarks.smoke) and fails on any value- or
-data-motion-check mismatch: the CI harness-breakage canary.
+writes ``BENCH_transfer.json`` (repo root) in the schema-versioned row
+format of ``benchmarks.bench_schema`` (v2): scheme x scenario x
+{first_wall_us, cached_wall_us, h2d_bytes, h2d_calls, enqueue_us, sync_us,
+skipped_bytes, delta_calls, sharded, n_devices, per_device_*, steady_*} —
+the machine-readable perf trajectory (compare across PRs with
+``scripts/update_experiments.py --transfer --old prev.json``; old-schema
+rows still parse).  ``--smoke`` runs ONLY the registry sweep at tiny sizes
+(benchmarks.smoke), including the steady-state delta contract of the
+steady_reuse family, and fails on any value- or data-motion-check
+mismatch: the CI harness-breakage canary.
 """
 from __future__ import annotations
 

@@ -11,7 +11,7 @@ import sys
 import time
 from typing import List
 
-from repro.scenarios import SCHEME_NAMES, iter_scenarios, run_scenario
+from repro.scenarios import iter_scenarios, run_scenario, run_steady_scenario
 
 
 def run(out=sys.stdout, size: str = "smoke") -> List[dict]:
@@ -22,7 +22,7 @@ def run(out=sys.stdout, size: str = "smoke") -> List[dict]:
     for sc in iter_scenarios(size):
         tree = sc.build()
         sc.validate(tree)
-        for name in SCHEME_NAMES:
+        for name in sc.scheme_names():
             m = run_scenario(sc, name, tree=tree)
             rows.append(dict(scenario=sc.name, scheme=name,
                              wall_us=round(m.wall_us, 1),
@@ -37,6 +37,28 @@ def run(out=sys.stdout, size: str = "smoke") -> List[dict]:
                 failures.append(
                     f"{sc.name}/{name}: motion ({m.h2d_bytes}, {m.h2d_calls})"
                     f" != expected {m.expected.as_tuple()}")
+        if sc.steady_expected is not None:
+            # steady-state delta contract: every warm pass ships exactly
+            # the dirty bucket (ledger equality), skips everything else,
+            # and still round-trips the mutated tree.
+            for i, m in enumerate(run_steady_scenario(sc, passes=2)):
+                rows.append(dict(scenario=sc.name,
+                                 scheme=f"marshal_delta/steady{i}",
+                                 wall_us=round(m.wall_us, 1),
+                                 h2d_bytes=m.h2d_bytes,
+                                 h2d_calls=m.h2d_calls,
+                                 ok=m.ok, motion_ok=m.motion_ok))
+                print(f"{sc.name},marshal_delta/steady{i},{m.wall_us:.1f},"
+                      f"{m.h2d_bytes},{m.h2d_calls},"
+                      f"{'ok' if m.ok else 'FAIL'},"
+                      f"{'ok' if m.motion_ok else 'FAIL'}", file=out)
+                if not m.ok:
+                    failures.append(f"{sc.name}/steady{i}: value check failed")
+                if not m.motion_ok:
+                    failures.append(
+                        f"{sc.name}/steady{i}: steady motion ({m.h2d_bytes}, "
+                        f"{m.h2d_calls}, skipped {m.skipped_bytes}) != "
+                        f"expected {sc.steady_expected.as_tuple()}")
     print(f"[smoke] {len(rows)} cells in {time.time() - t0:.1f}s", file=out)
     if failures:
         raise SystemExit("[smoke] FAILURES:\n  " + "\n  ".join(failures))

@@ -2,14 +2,23 @@
 
 The arena engine's claim is that the transfer *plan* is reusable metadata:
 the first ``to_device`` for a tree shape pays plan + staging-alloc + compile,
-every later call is pure data motion.  This section measures both over the
-ENTIRE ``repro.scenarios`` registry — one row per scheme x registered
-scenario — and (via ``benchmarks.run``) persists the rows to
-``BENCH_transfer.json`` so the perf trajectory is trackable across PRs.
+every later call is pure data motion — and, since the incremental engine,
+``marshal_delta`` rows show the next step: a repeat transfer whose staging
+versions have not moved ships NOTHING (``skipped_bytes`` + retained device
+buckets), and ``steady_reuse`` scenarios additionally report the per-pass
+cost when exactly one dtype bucket is dirty.  Sharded scenarios run every
+scheme against the whole host mesh and record the per-device split.
 
-Every row's ``h2d_bytes``/``h2d_calls`` is asserted against the scenario's
-analytic expectation (DESIGN.md §4 invariant 4 makes these exact): a scheme
-that silently changes its data motion fails the benchmark, not just a test.
+This section measures all of it over the ENTIRE ``repro.scenarios``
+registry — one row per applicable scheme x registered scenario — and (via
+``benchmarks.run``) persists the rows to ``BENCH_transfer.json`` in the
+schema-versioned format of ``benchmarks.bench_schema`` so the perf
+trajectory stays machine-comparable across PRs.
+
+Every row's first-pass ``h2d_bytes``/``h2d_calls`` (and per-device split,
+when sharded) is asserted against the scenario's analytic expectation
+(DESIGN.md §4 invariant 4 makes these exact): a scheme that silently
+changes its data motion fails the benchmark, not just a test.
 """
 from __future__ import annotations
 
@@ -20,8 +29,13 @@ from typing import Any, List, Optional
 
 import jax
 
-from repro.core import make_scheme
-from repro.scenarios import SCHEME_NAMES, Scenario, iter_scenarios
+from repro.scenarios import (Scenario, iter_scenarios, motion_matches,
+                             run_steady_scenario)
+
+from .bench_schema import SCHEMA_VERSION, upgrade_row
+
+_COLS = ("scenario,scheme,first_wall_us,cached_wall_us,speedup,h2d_bytes,"
+         "h2d_calls,enqueue_us,sync_us,skipped_bytes,steady_wall_us")
 
 
 def _one_transfer(scheme, sc: Scenario, tree: Any) -> float:
@@ -39,50 +53,73 @@ def _one_transfer(scheme, sc: Scenario, tree: Any) -> float:
     return time.perf_counter() - t0
 
 
+def _steady_columns(sc: Scenario) -> dict:
+    """steady_reuse x delta: per-pass wall/bytes with ONE dirty bucket."""
+    ms = run_steady_scenario(sc, passes=3)
+    assert all(m.ok and m.motion_ok for m in ms), \
+        f"{sc.name}: steady delta pass broke its ledger contract: {ms}"
+    best = min(ms, key=lambda m: m.wall_us)
+    return dict(steady_wall_us=round(best.wall_us, 1),
+                steady_h2d_bytes=best.h2d_bytes)
+
+
 def run(out=sys.stdout, repeats: int = 5, quick: bool = False,
         json_path: Optional[str] = None, size: Optional[str] = None) -> List[dict]:
     size = size or ("quick" if quick else "full")
     rows: List[dict] = []
-    print("scenario,scheme,first_wall_us,cached_wall_us,speedup,"
-          "h2d_bytes,h2d_calls,enqueue_us,sync_us", file=out)
+    print(_COLS, file=out)
     for sc in iter_scenarios(size):
         tree = sc.build()
-        for name in SCHEME_NAMES:
-            scheme = make_scheme(name)
+        for name in sc.scheme_names():
+            scheme = sc.make_scheme(name)
             first_us = _one_transfer(scheme, sc, tree) * 1e6
             h2d_bytes, h2d_calls = (scheme.ledger.h2d_bytes,
                                     scheme.ledger.h2d_calls)
             expected = sc.expected_motion(
                 name, tree, align_elems=getattr(scheme, "align_elems", 1))
-            assert (h2d_bytes, h2d_calls) == expected.as_tuple(), (
-                f"{sc.name}/{name}: ledger ({h2d_bytes}, {h2d_calls}) != "
-                f"analytic expectation {expected.as_tuple()}")
-            cached, enq, syn = [], [], []
+            assert motion_matches(scheme.ledger, expected, sc.num_shards), (
+                f"{sc.name}/{name}: ledger ({h2d_bytes}, {h2d_calls}, "
+                f"{scheme.ledger.per_device()}) != analytic expectation "
+                f"{expected}")
+            cached, enq, syn, skip, dcalls = [], [], [], [], []
             for _ in range(repeats):
                 if name == "uvm":
                     # demand paging has no persistent plan: every pass
                     # re-faults, so "cached" only measures batching gains
-                    scheme = make_scheme(name)
+                    scheme = sc.make_scheme(name)
                 scheme.ledger.reset()
                 cached.append(_one_transfer(scheme, sc, tree) * 1e6)
                 enq.append(scheme.ledger.enqueue_s * 1e6)
                 syn.append(scheme.ledger.sync_s * 1e6)
+                skip.append(scheme.ledger.skipped_bytes)
+                dcalls.append(scheme.ledger.delta_calls)
             cached_us = min(cached)
             i = cached.index(cached_us)
-            row = dict(scenario=sc.name, family=sc.family, scheme=name,
+            row = dict(schema=SCHEMA_VERSION,
+                       scenario=sc.name, family=sc.family, scheme=name,
                        first_wall_us=round(first_us, 1),
                        cached_wall_us=round(cached_us, 1),
                        speedup=round(first_us / cached_us, 2),
                        h2d_bytes=h2d_bytes, h2d_calls=h2d_calls,
-                       enqueue_us=round(enq[i], 1), sync_us=round(syn[i], 1))
+                       enqueue_us=round(enq[i], 1), sync_us=round(syn[i], 1),
+                       skipped_bytes=skip[i], delta_calls=dcalls[i],
+                       sharded=sc.sharding is not None,
+                       n_devices=sc.num_shards,
+                       per_device_bytes=expected.per_device_bytes,
+                       per_device_calls=expected.per_device_calls)
+            if name == "marshal_delta" and sc.steady_expected is not None:
+                row.update(_steady_columns(sc))
+            row = upgrade_row(row)
             rows.append(row)
+            csv = {k: ("" if v is None else v) for k, v in row.items()}
             print("{scenario},{scheme},{first_wall_us},{cached_wall_us},"
-                  "{speedup},{h2d_bytes},{h2d_calls},{enqueue_us},{sync_us}"
-                  .format(**row), file=out)
+                  "{speedup},{h2d_bytes},{h2d_calls},{enqueue_us},{sync_us},"
+                  "{skipped_bytes},{steady_wall_us}".format(**csv), file=out)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rows, f, indent=2)
-        print(f"[transfer_steady] wrote {json_path}", file=out)
+        print(f"[transfer_steady] wrote {json_path} "
+              f"(schema v{SCHEMA_VERSION})", file=out)
     return rows
 
 

@@ -1,17 +1,40 @@
-"""Inject the generated roofline table into EXPERIMENTS.md (marker-based)."""
-import io
-import re
+"""Inject generated result tables into EXPERIMENTS.md (marker-based).
+
+    python scripts/update_experiments.py                 # roofline table
+    python scripts/update_experiments.py --transfer      # BENCH_transfer summary
+    python scripts/update_experiments.py --transfer --old prev.json
+                                                         # + cross-PR trajectory
+
+The transfer mode reads BENCH_transfer.json through
+``benchmarks.bench_schema`` — rows of ANY schema vintage parse (schema-less
+v1 rows included), so adding columns (delta/sharded, schema v2) never
+breaks trajectory comparison against artifacts from older PRs.
+"""
+import argparse
+import os
 import sys
 
 sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
-from benchmarks import roofline
+ROOFLINE_MARK = "<!-- ROOFLINE_TABLE -->"
+TRANSFER_BEGIN = "<!-- TRANSFER_TABLE_BEGIN -->"
+TRANSFER_END = "<!-- TRANSFER_TABLE_END -->"
 
-MARK = "<!-- ROOFLINE_TABLE -->"
+
+def _replace_section(text: str, begin: str, end: str, body: str) -> str:
+    """Idempotent marker-delimited replacement (re-runs overwrite)."""
+    block = f"{begin}\n{body}\n{end}"
+    if begin in text and end in text:
+        head = text.split(begin)[0]
+        tail = text.split(end, 1)[1]
+        return head + block + tail
+    return text.rstrip() + "\n\n" + block + "\n"
 
 
-def main():
+def roofline_main() -> None:
+    from benchmarks import roofline
+
     rows = [a for a in (roofline.analyse(c)
                         for c in roofline.load_cells("artifacts/dryrun")) if a]
     rows.sort(key=lambda r: (r["mesh"] != "single", r["arch"], r["shape"]))
@@ -22,10 +45,62 @@ def main():
                  f"(long_500k on pure full-attention archs — DESIGN.md §4.2); "
                  f"every skip is an explicit JSON artifact.*")
     text = open("EXPERIMENTS.md").read()
-    assert MARK in text
-    out = text.replace(MARK, table + skip_note)
-    open("EXPERIMENTS.md", "w").write(out)
+    assert ROOFLINE_MARK in text
+    open("EXPERIMENTS.md", "w").write(text.replace(ROOFLINE_MARK,
+                                                   table + skip_note))
     print(f"injected {len(rows)} rows")
+
+
+def transfer_main(json_path: str, old_path: str = None) -> None:
+    from benchmarks import bench_schema
+
+    rows = bench_schema.load_rows(json_path)
+    lines = ["| scenario | scheme | cached µs | h2d bytes | calls | "
+             "skipped | devices | steady µs |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['scenario']} | {r['scheme']} | {r['cached_wall_us']} | "
+            f"{r['h2d_bytes']} | {r['h2d_calls']} | {r['skipped_bytes']} | "
+            f"{r['n_devices']} | {r['steady_wall_us'] or ''} |")
+    body = (f"### Steady-state transfers (schema "
+            f"v{bench_schema.SCHEMA_VERSION}, {len(rows)} rows)\n\n"
+            + "\n".join(lines))
+    if old_path:
+        cmp_rows = bench_schema.compare(bench_schema.load_rows(old_path),
+                                        rows)
+        body += ("\n\n### Trajectory vs previous PR (cached_wall_us)\n\n"
+                 "| scenario | scheme | old | new | speedup |\n"
+                 "|---|---|---|---|---|\n")
+        body += "\n".join(
+            f"| {c['scenario']} | {c['scheme']} | "
+            f"{c['old_cached_wall_us'] or ''} | "
+            f"{c['new_cached_wall_us'] or ''} | {c['speedup'] or ''} |"
+            for c in cmp_rows)
+    # the fallback template keeps the roofline marker so the default mode
+    # still works on a file first created by --transfer
+    text = open("EXPERIMENTS.md").read() if os.path.exists("EXPERIMENTS.md") \
+        else f"# EXPERIMENTS\n\n{ROOFLINE_MARK}\n"
+    open("EXPERIMENTS.md", "w").write(
+        _replace_section(text, TRANSFER_BEGIN, TRANSFER_END, body))
+    print(f"injected {len(rows)} transfer rows"
+          + (f" + trajectory vs {old_path}" if old_path else ""))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--transfer", action="store_true",
+                    help="inject the BENCH_transfer.json summary instead of "
+                         "the roofline table")
+    ap.add_argument("--json", default="BENCH_transfer.json")
+    ap.add_argument("--old", default=None,
+                    help="older BENCH_transfer.json (any schema vintage) to "
+                         "diff the trajectory against")
+    args = ap.parse_args()
+    if args.transfer:
+        transfer_main(args.json, args.old)
+    else:
+        roofline_main()
 
 
 if __name__ == "__main__":

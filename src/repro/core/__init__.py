@@ -5,12 +5,13 @@ Deep-copy semantics (full/selective), the pointerchain directive
 schemes (:mod:`schemes`) that the benchmark suite compares.
 """
 from .treepath import TreePath, leaf_paths, leaf_items, max_chain_depth
-from .chainref import (ChainRef, declare, extract, insert, region, chain_call,
-                       chain_jit)
+from .chainref import (ChainRef, ShardSlice, declare, extract, insert, region,
+                       chain_call, chain_jit, resolve_shards)
 from .arena import (ArenaLayout, LeafSlot, plan, pack, unpack, repack_into,
-                    datasize_linear, datasize_dense)
+                    shard_ranges, datasize_linear, datasize_dense)
 from .engine import (ArenaEntry, cached_plan, get_entry, pack_traced,
-                     unpack_traced, repack_traced, cache_stats, clear_cache)
+                     unpack_traced, repack_traced, cache_stats, clear_cache,
+                     set_cache_limits, num_shards_of)
 from .schemes import (TransferLedger, TransferScheme, UVMScheme, MarshalScheme,
                       PointerChainScheme, SCHEMES, make_scheme)
 from .deepcopy import (full_deepcopy, selective_deepcopy, host_skeleton,
@@ -18,12 +19,13 @@ from .deepcopy import (full_deepcopy, selective_deepcopy, host_skeleton,
 
 __all__ = [
     "TreePath", "leaf_paths", "leaf_items", "max_chain_depth",
-    "ChainRef", "declare", "extract", "insert", "region", "chain_call",
-    "chain_jit",
+    "ChainRef", "ShardSlice", "declare", "extract", "insert", "region",
+    "chain_call", "chain_jit", "resolve_shards",
     "ArenaLayout", "LeafSlot", "plan", "pack", "unpack", "repack_into",
-    "datasize_linear", "datasize_dense",
+    "shard_ranges", "datasize_linear", "datasize_dense",
     "ArenaEntry", "cached_plan", "get_entry", "pack_traced", "unpack_traced",
-    "repack_traced", "cache_stats", "clear_cache",
+    "repack_traced", "cache_stats", "clear_cache", "set_cache_limits",
+    "num_shards_of",
     "TransferLedger", "TransferScheme", "UVMScheme", "MarshalScheme",
     "PointerChainScheme", "SCHEMES", "make_scheme",
     "full_deepcopy", "selective_deepcopy", "host_skeleton", "tree_bytes",

@@ -46,6 +46,9 @@ class ArenaLayout:
     slots: Tuple[LeafSlot, ...]
     bucket_sizes: Dict[str, int]      # elements per bucket
     align_elems: int
+    # per-device arenas: bucket sizes are padded to a multiple of this, so
+    # each of ``shard_multiple`` devices owns an equal contiguous sub-range.
+    shard_multiple: int = 1
 
     @property
     def num_leaves(self) -> int:
@@ -67,8 +70,14 @@ def _align(x: int, a: int) -> int:
     return ((x + a - 1) // a) * a
 
 
-def plan(tree: Any, align_elems: int = 1) -> ArenaLayout:
-    """Walk the tree once, assign every leaf an offset in its dtype bucket."""
+def plan(tree: Any, align_elems: int = 1,
+         shard_multiple: int = 1) -> ArenaLayout:
+    """Walk the tree once, assign every leaf an offset in its dtype bucket.
+
+    ``shard_multiple > 1`` pads every bucket's total size up to a multiple of
+    it (tail padding only; slot offsets are unchanged), so the bucket splits
+    into that many equal contiguous per-device sub-ranges.
+    """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     cursors: Dict[str, int] = {}
     slots: List[LeafSlot] = []
@@ -80,7 +89,31 @@ def plan(tree: Any, align_elems: int = 1) -> ArenaLayout:
         size = int(np.prod(arr.shape)) if arr.shape else 1
         slots.append(LeafSlot(bucket, off, size, tuple(arr.shape), dtype))
         cursors[bucket] = off + size
-    return ArenaLayout(treedef, tuple(slots), dict(cursors), align_elems)
+    if shard_multiple > 1:
+        cursors = {b: _align(n, shard_multiple) for b, n in cursors.items()}
+    return ArenaLayout(treedef, tuple(slots), dict(cursors), align_elems,
+                       shard_multiple)
+
+
+def shard_ranges(layout: ArenaLayout,
+                 num_shards: Optional[int] = None) -> Dict[str, List[Tuple[int, int]]]:
+    """Equal contiguous (lo, hi) element ranges per shard for every bucket.
+
+    The per-device half of the requestList: shard ``i`` of bucket ``b`` owns
+    elements ``[i*n/k, (i+1)*n/k)``.  Requires the bucket size to be a
+    multiple of the shard count (``plan(..., shard_multiple=k)`` guarantees
+    it by tail-padding).
+    """
+    k = num_shards or layout.shard_multiple
+    out: Dict[str, List[Tuple[int, int]]] = {}
+    for bucket, n in layout.bucket_sizes.items():
+        if n % k:
+            raise ValueError(
+                f"bucket {bucket!r} has {n} elements, not divisible into "
+                f"{k} shards; plan with shard_multiple={k}")
+        step = n // k
+        out[bucket] = [(i * step, (i + 1) * step) for i in range(k)]
+    return out
 
 
 Buffers = Dict[str, Any]

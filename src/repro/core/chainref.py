@@ -100,6 +100,50 @@ def extract(tree: Any, refs: Sequence[ChainRef]) -> list[Any]:
     return [leaves[r.flat_index] for r in refs]
 
 
+# -- per-shard chain resolution (sharded arenas) -----------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardSlice:
+    """One device's piece of a declared chain inside a sharded arena.
+
+    ``lo``/``hi`` are bucket-global element offsets; ``local_lo`` is the
+    offset inside the shard's own contiguous sub-buffer — the per-device
+    effective address, resolved once like ``flat_index``.
+    """
+
+    shard: int
+    bucket: str
+    lo: int
+    hi: int
+    local_lo: int
+
+    @property
+    def size(self) -> int:
+        return self.hi - self.lo
+
+
+def resolve_shards(ref: ChainRef, layout: Any,
+                   num_shards: Optional[int] = None) -> tuple[ShardSlice, ...]:
+    """Resolve a declared chain to the per-device sub-ranges of its arena
+    bucket (the sharded analogue of the extracted ``0xB123``): intersect the
+    chain's slot extent with each shard's contiguous range.  A chain whose
+    leaf straddles a shard boundary resolves to multiple slices; a chain
+    whose leaf lies inside one shard resolves to exactly one — its transfer
+    touches exactly one device.
+    """
+    from . import arena as arena_lib
+
+    slot = layout.slots[ref.flat_index]
+    ranges = arena_lib.shard_ranges(layout, num_shards)[slot.bucket]
+    out = []
+    for shard, (lo, hi) in enumerate(ranges):
+        a = max(slot.offset, lo)
+        b = min(slot.offset + slot.size, hi)
+        if a < b:
+            out.append(ShardSlice(shard, slot.bucket, a, b, a - lo))
+    return tuple(out)
+
+
 def insert(tree: Any, refs: Sequence[ChainRef], values: Sequence[Any]) -> Any:
     """Write extracted values back through their chains (paper §3.3)."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)

@@ -1,37 +1,44 @@
-"""Arena transfer engine — persistent layouts, staging buffers, fused kernels.
+"""Arena transfer engine — persistent layouts, versioned staging, fences.
 
 The paper's Algorithm 1 separates *planning* (determineTotalBytes + the
 requestList) from *data motion* (serve allocations, one batched DMA).  The
 seed code re-ran the plan and re-packed with ``np.concatenate`` on every
 ``to_device``; this module makes the plan a reusable, cached artifact
-(LLAMA's layout-as-metadata, arXiv 2106.04284) so the steady-state hot path
-is pure data motion (the pointerchain extract-once principle,
-arXiv 1906.01128, applied to the whole marshalling plan):
+(LLAMA's layout-as-metadata, arXiv 2106.04284) and makes the *staging
+contents* a versioned artifact too, so steady-state repeat transfers can
+skip buckets whose bytes have not changed (delta transfers):
 
-  * :func:`cached_plan`   — module-level ``ArenaLayout`` cache keyed by
-                            (treedef, leaf signature, alignment), the same
-                            shape as ``chainref._INDEX_CACHE``.
-  * :class:`ArenaEntry`   — per-layout persistent state: a preallocated host
-                            staging buffer per dtype bucket (``pack_host`` is
-                            in-place slice writes, zero allocations) and
-                            jit-compiled fused unpack / device-pack / repack
-                            (one compiled gather/scatter region instead of a
-                            per-leaf dispatch loop).
+  * :func:`cached_plan`   — LRU-bounded ``ArenaLayout`` cache keyed by
+                            (treedef, leaf signature, alignment, shards).
+  * :class:`ArenaEntry`   — per-layout persistent state:
+      - TWO host staging buffers per dtype bucket (double buffering): a
+        rewrite rotates to the other buffer and waits only that buffer's
+        fence, so packing call N+1 can overlap the in-flight DMA of call N;
+      - per-bucket monotone **version counters**: ``pack_host`` memcmp's
+        each leaf against the staged copy and bumps a bucket's version only
+        when bytes actually changed (``trust_identity=True`` additionally
+        skips the memcmp when the identical leaf *object* was packed last
+        time — callers that mutate leaves in place must then call
+        :meth:`ArenaEntry.mark_dirty` / :meth:`ArenaEntry.bump_version`);
+      - jit-compiled fused unpack / device-pack / repack.
   * :func:`pack_traced` / :func:`unpack_traced` — the same fused transforms
                             as free functions, safe to call under an outer
                             ``jit``/``shard_map`` trace (the gradient-arena
                             path in ``runtime/train.py``).
 
-Invariant: staging buffers are reused across calls, and ``jax.device_put``
-may zero-copy ALIAS a suitably aligned numpy buffer instead of copying it
-(observed on the XLA CPU client).  Callers must therefore synchronize every
-computation that reads a staged bucket before the next ``pack_host`` — see
-DESIGN.md §4 for the full invariant list.
+Aliasing invariant: ``jax.device_put`` may zero-copy ALIAS a suitably
+aligned numpy buffer (observed on the XLA CPU client), so a staging buffer
+may be read by device values long after the put returns.  Every consumer
+must either synchronize before staging is rewritten (the blocking
+``MarshalScheme`` path) or register the consuming arrays as a **fence** on
+the buffer (:meth:`ArenaEntry.add_fence`); ``pack_host`` waits a buffer's
+fence before rewriting it.  See DESIGN.md §4/§7.
 """
 from __future__ import annotations
 
 import collections
-from typing import Any, Dict, List, Tuple
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,15 +49,37 @@ from .arena import ArenaLayout
 
 Buffers = arena_lib.Buffers
 
-# cache: (treedef, leaf signature, align_elems) -> ArenaLayout
-_LAYOUT_CACHE: Dict[Tuple[Any, Tuple, int], ArenaLayout] = {}
-# LRU cache: same key -> ArenaEntry.  Bounded: each entry pins full-size
-# host staging buffers plus three compiled executables, so unlike the
-# (tiny) layouts they cannot be allowed to accumulate forever.
-_ENTRY_CACHE: "collections.OrderedDict[Tuple[Any, Tuple, int], ArenaEntry]" \
+# LRU caches keyed by (treedef, leaf signature, align_elems, num_shards).
+# Layouts are tiny but long-running serve/train loops can still visit an
+# unbounded stream of shapes; entries additionally pin full-size host
+# staging buffers plus three compiled executables.  Both are bounded.
+_LAYOUT_CACHE: "collections.OrderedDict[Tuple[Any, Tuple, int, int], ArenaLayout]" \
     = collections.OrderedDict()
+_ENTRY_CACHE: "collections.OrderedDict[Tuple[Any, Tuple, int, int], ArenaEntry]" \
+    = collections.OrderedDict()
+LAYOUT_CACHE_MAX = 512
 ENTRY_CACHE_MAX = 64
-_STATS = {"hits": 0, "misses": 0}
+_STATS = {"hits": 0, "misses": 0, "layout_evictions": 0, "entry_evictions": 0}
+
+
+def set_cache_limits(layout_max: Optional[int] = None,
+                     entry_max: Optional[int] = None) -> None:
+    """Configure the cache caps (e.g. per deployment memory budget)."""
+    global LAYOUT_CACHE_MAX, ENTRY_CACHE_MAX
+    if layout_max is not None:
+        LAYOUT_CACHE_MAX = int(layout_max)
+    if entry_max is not None:
+        ENTRY_CACHE_MAX = int(entry_max)
+    _trim_caches()
+
+
+def _trim_caches() -> None:
+    while len(_LAYOUT_CACHE) > LAYOUT_CACHE_MAX:
+        _LAYOUT_CACHE.popitem(last=False)
+        _STATS["layout_evictions"] += 1
+    while len(_ENTRY_CACHE) > ENTRY_CACHE_MAX:
+        _ENTRY_CACHE.popitem(last=False)
+        _STATS["entry_evictions"] += 1
 
 
 def _leaf_signature(leaves) -> Tuple:
@@ -64,40 +93,65 @@ def _leaf_signature(leaves) -> Tuple:
     return tuple(sig)
 
 
-def _layout_key(tree: Any, align_elems: int) -> Tuple[Any, Tuple, int]:
+def num_shards_of(sharding: Any) -> int:
+    """Shard count of a sharding target: an int, a NamedSharding (mesh
+    size), or None (1)."""
+    if sharding is None:
+        return 1
+    if isinstance(sharding, int):
+        return int(sharding)
+    mesh = getattr(sharding, "mesh", None)
+    if mesh is not None:
+        return int(np.prod(mesh.devices.shape))
+    raise TypeError(f"cannot derive a shard count from {sharding!r}")
+
+
+def _layout_key(tree: Any, align_elems: int,
+                num_shards: int = 1) -> Tuple[Any, Tuple, int, int]:
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    return (treedef, _leaf_signature(leaves), align_elems)
+    return (treedef, _leaf_signature(leaves), align_elems, num_shards)
 
 
-def _plan_for_key(key: Tuple[Any, Tuple, int], tree: Any,
-                  align_elems: int) -> ArenaLayout:
+def _plan_for_key(key: Tuple[Any, Tuple, int, int], tree: Any,
+                  align_elems: int, num_shards: int = 1) -> ArenaLayout:
     layout = _LAYOUT_CACHE.get(key)
     if layout is None:
         _STATS["misses"] += 1
-        layout = arena_lib.plan(tree, align_elems)
+        layout = arena_lib.plan(tree, align_elems, shard_multiple=num_shards)
         _LAYOUT_CACHE[key] = layout
+        _trim_caches()
     else:
         _STATS["hits"] += 1
+        _LAYOUT_CACHE.move_to_end(key)
     return layout
 
 
-def cached_plan(tree: Any, align_elems: int = 1) -> ArenaLayout:
+def cached_plan(tree: Any, align_elems: int = 1,
+                sharding: Any = None) -> ArenaLayout:
     """``arena.plan`` behind the persistent layout cache.
 
     Works on concrete trees AND on tracer trees (inside jit/shard_map): the
-    key only reads shapes/dtypes, never values.
+    key only reads shapes/dtypes, never values.  ``sharding`` (an int shard
+    count or a NamedSharding) pads every bucket to a per-device multiple
+    and becomes part of the cache key.
     """
-    return _plan_for_key(_layout_key(tree, align_elems), tree, align_elems)
+    k = num_shards_of(sharding)
+    return _plan_for_key(_layout_key(tree, align_elems, k), tree,
+                         align_elems, k)
 
 
 def cache_stats() -> Dict[str, int]:
-    return dict(_STATS)
+    out = dict(_STATS)
+    out["layout_size"] = len(_LAYOUT_CACHE)
+    out["entry_size"] = len(_ENTRY_CACHE)
+    return out
 
 
 def clear_cache() -> None:
     _LAYOUT_CACHE.clear()
     _ENTRY_CACHE.clear()
-    _STATS["hits"] = _STATS["misses"] = 0
+    for k in _STATS:
+        _STATS[k] = 0
 
 
 # ---------------------------------------------------------------------------
@@ -153,19 +207,44 @@ def repack_traced(buffers: Buffers, layout: ArenaLayout, tree: Any) -> Buffers:
 # ArenaEntry — persistent per-layout state
 # ---------------------------------------------------------------------------
 
+# per-buffer fences are trimmed to this depth: older fence groups are
+# force-waited so a long clean streak cannot pin unbounded device values.
+FENCE_DEPTH = 8
+
+
 class ArenaEntry:
-    """Everything reusable about one (treedef, signature, alignment) point:
-    the layout, a host staging buffer per bucket, and the compiled fused
+    """Everything reusable about one (treedef, signature, alignment, shards)
+    point: the layout, double-buffered host staging per bucket with content
+    version counters and per-buffer fences, and the compiled fused
     transforms.  Created once, then every call is pure data motion."""
 
     def __init__(self, layout: ArenaLayout):
         self.layout = layout
-        # preallocated, zero-initialised staging: alignment gaps stay zero
-        # forever; pack_host only ever rewrites live leaf extents.
-        self.staging: Dict[str, np.ndarray] = {
-            b: np.zeros(int(n), np.dtype(b))
+        # double-buffered, zero-initialised staging: alignment gaps stay
+        # zero forever; writes only ever touch live leaf extents, and a
+        # rewrite rotates to the buffer whose DMA cannot still be in flight
+        # (after waiting its fence).
+        self._bufs: Dict[str, List[np.ndarray]] = {
+            b: [np.zeros(int(n), np.dtype(b)), np.zeros(int(n), np.dtype(b))]
             for b, n in layout.bucket_sizes.items()}
+        self._active: Dict[str, int] = {b: 0 for b in self._bufs}
+        self._fences: Dict[str, List[List[Any]]] = {
+            b: [[], []] for b in self._bufs}
+        # staging content versions: versions[b] bumps exactly when bucket
+        # b's staged bytes change (or bump_version forces it) — monotone.
+        self.versions: Dict[str, int] = {b: 0 for b in self._bufs}
+        self._slot_vers: List[int] = [0] * layout.num_leaves
+        self._bucket_slots: Dict[str, List[int]] = {b: [] for b in self._bufs}
+        for i, slot in enumerate(layout.slots):
+            if slot.size:
+                self._bucket_slots[slot.bucket].append(i)
+        self._buf_slot_vers: Dict[str, List[List[int]]] = {
+            b: [[-1] * len(idx), [-1] * len(idx)]
+            for b, idx in self._bucket_slots.items()}
+        self._last_leaf: List[Any] = [None] * layout.num_leaves
+        self._recheck: set = set()          # buckets whose identity skip is off
         self.pack_host_calls = 0
+        self.fence_wait_s = 0.0             # accumulated; take_fence_wait()
 
         def _unpack(buffers):
             return tuple(unpack_leaves(buffers, layout))
@@ -184,19 +263,112 @@ class ArenaEntry:
         self.pack_device_jit = jax.jit(_pack_device)
         self.repack_jit = jax.jit(_repack)
 
+    # -- staging views -------------------------------------------------------
+    @property
+    def staging(self) -> Buffers:
+        """The ACTIVE buffer per bucket (the one holding the newest bytes)."""
+        return {b: bufs[self._active[b]] for b, bufs in self._bufs.items()}
+
+    def shard_views(self, num_shards: Optional[int] = None
+                    ) -> Dict[str, List[np.ndarray]]:
+        """Zero-copy per-device views of every active bucket buffer."""
+        ranges = arena_lib.shard_ranges(self.layout, num_shards)
+        stg = self.staging
+        return {b: [stg[b][lo:hi] for lo, hi in rs]
+                for b, rs in ranges.items()}
+
+    # -- dirty tracking ------------------------------------------------------
+    def mark_dirty(self, *buckets: str) -> None:
+        """Disable the identity fast path for these buckets (all if none
+        given) until the next ``pack_host``: leaves are re-compared against
+        staging, so in-place host mutations are detected."""
+        self._recheck.update(buckets or self._bufs)
+
+    def bump_version(self, *buckets: str) -> None:
+        """Unconditionally advance bucket versions (all if none given),
+        forcing the next delta transfer to re-ship them even if the staged
+        bytes are unchanged."""
+        for b in (buckets or list(self._bufs)):
+            self.versions[b] += 1
+
+    # -- fences --------------------------------------------------------------
+    def add_fence(self, bucket: str, values: Sequence[Any]) -> None:
+        """Register device values that (may) read the bucket's active buffer.
+        ``pack_host`` waits them before rewriting that buffer."""
+        fence = self._fences[bucket][self._active[bucket]]
+        fence.append(list(values))
+        while len(fence) > FENCE_DEPTH:
+            jax.block_until_ready(fence.pop(0))
+
+    def _wait_fence(self, bucket: str, buf_idx: int) -> None:
+        fence = self._fences[bucket][buf_idx]
+        if fence:
+            t0 = time.perf_counter()
+            jax.block_until_ready([v for grp in fence for v in grp])
+            self.fence_wait_s += time.perf_counter() - t0
+            fence.clear()
+
+    def take_fence_wait(self) -> float:
+        s, self.fence_wait_s = self.fence_wait_s, 0.0
+        return s
+
     # -- host side ----------------------------------------------------------
-    def pack_host(self, tree: Any) -> Buffers:
-        """Marshal into the persistent staging buffers: in-place slice writes,
-        no list-building, no ``np.concatenate``, no allocations."""
+    def pack_host(self, tree: Any, *, trust_identity: bool = False) -> Buffers:
+        """Marshal into the persistent staging buffers and update version
+        counters.  Per leaf: skip when the staged bytes already match
+        (memcmp); with ``trust_identity`` also skip the memcmp when the
+        identical leaf object was packed last time (in-place mutators must
+        ``mark_dirty``).  Buckets that change rotate to their spare buffer
+        (waiting only that buffer's fence) and bump their version.
+        """
         leaves = jax.tree_util.tree_leaves(tree)
         if len(leaves) != self.layout.num_leaves:
             raise ValueError("tree does not match arena layout")
-        for leaf, slot in zip(leaves, self.layout.slots):
+        pending: Dict[int, np.ndarray] = {}
+        for i, (leaf, slot) in enumerate(zip(leaves, self.layout.slots)):
             if slot.size == 0:
                 continue
-            dst = self.staging[slot.bucket]
-            dst[slot.offset:slot.offset + slot.size] = \
-                np.asarray(leaf, dtype=slot.dtype).reshape(-1)
+            recheck = slot.bucket in self._recheck
+            if (trust_identity and not recheck
+                    and self._last_leaf[i] is leaf):
+                continue
+            arr = np.asarray(leaf, dtype=slot.dtype).reshape(-1)
+            # the memcmp is the fingerprint: it costs one read pass over the
+            # leaf but is what lets shared entries keep exact versions (and
+            # lets unchanged repeat packs skip the write entirely).  A slot
+            # that was never packed is always dirty — no point comparing
+            # against the zero-initialised staging.
+            if self._last_leaf[i] is not None:
+                act = self._bufs[slot.bucket][self._active[slot.bucket]]
+                staged = act[slot.offset:slot.offset + slot.size]
+                # compare raw bytes, not values: NaN != NaN under value
+                # comparison, which would make any NaN-bearing bucket
+                # permanently dirty and silently defeat the delta path.
+                if np.array_equal(staged.view(np.uint8),
+                                  np.ascontiguousarray(arr).view(np.uint8)):
+                    self._last_leaf[i] = leaf
+                    continue
+            self._slot_vers[i] += 1
+            pending[i] = arr
+            self._last_leaf[i] = leaf
+        dirty = {self.layout.slots[i].bucket for i in pending}
+        for b in dirty:
+            tgt = 1 - self._active[b]
+            self._wait_fence(b, tgt)
+            buf = self._bufs[b][tgt]
+            held = self._buf_slot_vers[b][tgt]
+            for lj, si in enumerate(self._bucket_slots[b]):
+                if held[lj] < self._slot_vers[si]:
+                    slot = self.layout.slots[si]
+                    arr = pending.get(si)
+                    if arr is None:
+                        arr = np.asarray(leaves[si],
+                                         dtype=slot.dtype).reshape(-1)
+                    buf[slot.offset:slot.offset + slot.size] = arr
+                    held[lj] = self._slot_vers[si]
+            self._active[b] = tgt
+            self.versions[b] += 1
+        self._recheck.clear()
         self.pack_host_calls += 1
         return self.staging
 
@@ -217,18 +389,19 @@ class ArenaEntry:
         return self.repack_jit(dict(buffers), leaves)
 
 
-def get_entry(tree: Any, align_elems: int = 1) -> ArenaEntry:
+def get_entry(tree: Any, align_elems: int = 1,
+              sharding: Any = None) -> ArenaEntry:
     """The engine's front door: cached ``ArenaEntry`` for this tree's shape.
 
     LRU-bounded at :data:`ENTRY_CACHE_MAX`: evicted entries stay usable for
     any scheme still holding them, they just stop being shared."""
-    key = _layout_key(tree, align_elems)
+    k = num_shards_of(sharding)
+    key = _layout_key(tree, align_elems, k)
     entry = _ENTRY_CACHE.get(key)
     if entry is None:
-        entry = ArenaEntry(_plan_for_key(key, tree, align_elems))
+        entry = ArenaEntry(_plan_for_key(key, tree, align_elems, k))
         _ENTRY_CACHE[key] = entry
-        while len(_ENTRY_CACHE) > ENTRY_CACHE_MAX:
-            _ENTRY_CACHE.popitem(last=False)
+        _trim_caches()
     else:
         _STATS["hits"] += 1
         _ENTRY_CACHE.move_to_end(key)

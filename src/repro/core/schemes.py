@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional, Sequence, Union
+import weakref
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -36,8 +37,18 @@ class TransferLedger:
     """Counts H2D/D2H traffic: the paper's implicit metric made explicit.
 
     ``wall_s`` is total transfer time, split into ``enqueue_s`` (issuing the
-    async copies) and ``sync_s`` (the single barrier) so batching overlap is
-    measurable: a fully serialized path has enqueue ≈ 0 and sync ≈ wall.
+    async copies) and ``sync_s`` (the barrier / fence waits) so batching
+    overlap is measurable: a fully serialized path has enqueue ≈ 0 and
+    sync ≈ wall.
+
+    Delta accounting (invariant 4 stays exact): ``h2d_bytes``/``h2d_calls``
+    record only bytes that actually moved; ``skipped_bytes`` records bytes a
+    delta transfer proved unchanged and did NOT move, so per pass
+    ``h2d_bytes + skipped_bytes`` equals the full-marshal motion.
+    ``delta_calls`` counts transfer passes that reused at least one clean
+    bucket.  ``*_by_device`` split the same exact totals per target device
+    (sharded transfers); an unsharded path records everything under its one
+    device.
     """
 
     h2d_bytes: int = 0
@@ -47,10 +58,23 @@ class TransferLedger:
     wall_s: float = 0.0
     enqueue_s: float = 0.0
     sync_s: float = 0.0
+    skipped_bytes: int = 0   # delta: bytes proven unchanged, not re-shipped
+    delta_calls: int = 0     # transfer passes that skipped >=1 clean bucket
+    h2d_bytes_by_device: Dict[str, int] = dataclasses.field(default_factory=dict)
+    h2d_calls_by_device: Dict[str, int] = dataclasses.field(default_factory=dict)
 
-    def record_h2d(self, nbytes: int) -> None:
+    def record_h2d(self, nbytes: int, device: Optional[Any] = None) -> None:
         self.h2d_bytes += int(nbytes)
         self.h2d_calls += 1
+        if device is not None:
+            key = str(getattr(device, "id", device))
+            self.h2d_bytes_by_device[key] = \
+                self.h2d_bytes_by_device.get(key, 0) + int(nbytes)
+            self.h2d_calls_by_device[key] = \
+                self.h2d_calls_by_device.get(key, 0) + 1
+
+    def record_skip(self, nbytes: int) -> None:
+        self.skipped_bytes += int(nbytes)
 
     def record_d2h(self, nbytes: int) -> None:
         self.d2h_bytes += int(nbytes)
@@ -61,20 +85,50 @@ class TransferLedger:
         self.sync_s += sync_s
         self.wall_s += enqueue_s + sync_s
 
+    def per_device(self) -> Dict[str, Tuple[int, int]]:
+        """{device id: (h2d_bytes, h2d_calls)} for sharded assertions."""
+        return {d: (self.h2d_bytes_by_device[d],
+                    self.h2d_calls_by_device.get(d, 0))
+                for d in self.h2d_bytes_by_device}
+
     def reset(self) -> None:
         self.h2d_bytes = self.d2h_bytes = 0
         self.h2d_calls = self.d2h_calls = 0
         self.wall_s = self.enqueue_s = self.sync_s = 0.0
+        self.skipped_bytes = self.delta_calls = 0
+        self.h2d_bytes_by_device.clear()
+        self.h2d_calls_by_device.clear()
 
 
 class TransferScheme:
-    """Protocol: move a nested state tree host<->device under a policy."""
+    """Protocol: move a nested state tree host<->device under a policy.
+
+    ``sharding`` (a ``NamedSharding``) makes the scheme place data across
+    every device of the sharding's mesh instead of on one device; the
+    ledger then additionally records exact per-device bytes/DMA counts.
+    """
 
     name: str = "base"
 
-    def __init__(self, device: Optional[Any] = None):
+    def __init__(self, device: Optional[Any] = None,
+                 sharding: Optional[Any] = None):
         self.device = device or jax.devices()[0]
+        self.sharding = sharding
+        self.target = sharding if sharding is not None else self.device
         self.ledger = TransferLedger()
+
+    def _shard_devices(self) -> list:
+        return list(self.sharding.mesh.devices.flat)
+
+    def _record_sharded_put(self, x: Any) -> None:
+        """One sharded device_put = one DMA per device; each device receives
+        its shard (replicated specs receive the full leaf per device)."""
+        shard_shape = self.sharding.shard_shape(np.shape(x))
+        itemsize = np.dtype(getattr(x, "dtype", np.asarray(x).dtype)).itemsize
+        nb = int(np.prod(shard_shape, dtype=np.int64)) * itemsize \
+            if shard_shape else itemsize
+        for d in self._shard_devices():
+            self.ledger.record_h2d(nb, device=d)
 
     # to_device returns a *device tree* whose accessed leaves live on device.
     def to_device(self, tree: Any, paths: Optional[Sequence[Union[str, TreePath]]] = None) -> Any:
@@ -106,23 +160,29 @@ class TransferScheme:
     def _put(self, x: Any) -> Any:
         return self._put_batch([x])[0]
 
-    def _put_batch(self, xs: Sequence[Any]) -> list:
+    def _put_batch(self, xs: Sequence[Any], sync: bool = True) -> list:
         """Enqueue every H2D copy, then synchronize ONCE.
 
-        One ledger DMA record per buffer (same data motion as issuing them
-        serially), but the copies overlap: wall time splits into the cheap
-        enqueue phase and a single sync barrier.
+        One ledger DMA record per buffer per target device (same data
+        motion as issuing them serially), but the copies overlap: wall time
+        splits into the cheap enqueue phase and a single sync barrier.
+        ``sync=False`` skips the barrier — the pipelined delta path fences
+        the staging buffers instead (DESIGN.md §7).
         """
         if not xs:
             return []
         t0 = time.perf_counter()
-        ys = [jax.device_put(x, self.device) for x in xs]
+        ys = [jax.device_put(x, self.target) for x in xs]
         t1 = time.perf_counter()
-        jax.block_until_ready(ys)
+        if sync:
+            jax.block_until_ready(ys)
         t2 = time.perf_counter()
         self.ledger.record_wall(t1 - t0, t2 - t1)
         for x in xs:
-            self.ledger.record_h2d(_nbytes(x))
+            if self.sharding is not None:
+                self._record_sharded_put(x)
+            else:
+                self.ledger.record_h2d(_nbytes(x), device=self.device)
         return ys
 
     def _get(self, x: Any) -> Any:
@@ -254,26 +314,75 @@ class MarshalScheme(TransferScheme):
     First call for a given tree shape: plan + compile (cache miss).  Every
     later call is pure data motion: in-place staging writes, one enqueued
     DMA per dtype bucket synchronized once, one fused-gather attach.
+
+    Three placement policies share the engine:
+
+    * default          — one device, every bucket shipped, blocking sync
+                         before staging may be rewritten (DESIGN.md §4.3).
+    * ``delta=True``   — steady-state incremental transfers: the scheme
+                         retains the device copy of every bucket and
+                         re-ships only buckets whose staging version moved;
+                         clean buckets are ``skipped_bytes`` in the ledger.
+                         Non-blocking: staging safety comes from per-buffer
+                         fences + double buffering (DESIGN.md §7), so the
+                         next ``pack_host`` overlaps this call's DMA.
+    * ``sharding=...`` — per-device arenas: every bucket is padded to a
+                         per-device multiple and split into equal contiguous
+                         shards; ALL (bucket x device) transfers are
+                         enqueued before one sync, then each bucket is
+                         assembled into one global sharded array.
     """
 
     name = "marshal"
 
-    def __init__(self, device: Optional[Any] = None, align_elems: int = 1):
-        super().__init__(device)
+    def __init__(self, device: Optional[Any] = None, align_elems: int = 1,
+                 delta: bool = False, sharding: Optional[Any] = None):
+        super().__init__(device, sharding)
+        if delta and sharding is not None:
+            raise ValueError("delta transfers and sharded arenas cannot be "
+                             "combined yet; pick one")
         self.align_elems = align_elems
+        self.delta = delta
+        if delta:
+            self.name = "marshal_delta"
         self.layout: Optional[arena_lib.ArenaLayout] = None
         self._entry: Optional[engine_lib.ArenaEntry] = None
+        # delta state is PER SCHEME INSTANCE (entries are shared globally):
+        # entry -> {bucket: (shipped version, retained device buffer)}
+        self._retained: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+        # entry -> (versions snapshot, unpacked device tree): a repeat pass
+        # with ZERO dirty buckets returns the memoized (immutable) tree —
+        # no DMA, no gather dispatch, pure fingerprint walk.
+        self._last_unpack: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
     def _entry_for(self, tree) -> engine_lib.ArenaEntry:
-        entry = engine_lib.get_entry(tree, self.align_elems)
+        entry = engine_lib.get_entry(tree, self.align_elems,
+                                     sharding=self.sharding)
         self._entry = entry
         self.layout = entry.layout
         return entry
 
+    def mark_dirty(self, tree, *paths: Union[str, TreePath]) -> None:
+        """Delta API for callers that mutate host leaves IN PLACE: flag the
+        buckets under ``paths`` (all buckets if none) so the next
+        ``to_device`` re-compares and re-ships them."""
+        entry = self._entry_for(tree)
+        if not paths:
+            entry.mark_dirty()
+            return
+        slots = entry.layout.slots
+        buckets = {slots[r.flat_index].bucket for r in declare(tree, *paths)}
+        entry.mark_dirty(*buckets)
+
     def to_device(self, tree, paths=None):
         # 1) determineTotalBytes + requestList (cached); 2) pack into the
         # persistent staging arena; 3) ONE enqueued transfer per dtype
-        # bucket, ONE sync; 4) attach = fused gather over device buffers.
+        # bucket (per device when sharded, only dirty buckets when delta);
+        # 4) attach = fused gather over device buffers.
+        if self.sharding is not None:
+            return self._to_device_sharded(tree)
+        if self.delta:
+            return self._to_device_delta(tree)
         entry = self._entry_for(tree)
         buffers = entry.pack_host(tree)
         names = list(buffers)
@@ -284,6 +393,99 @@ class MarshalScheme(TransferScheme):
         # next pack_host.  Synchronizing the fused unpack here guarantees no
         # live device value still reads staging when we return.
         return jax.block_until_ready(out)
+
+    # -- delta: dirty-bucket incremental transfers ---------------------------
+    def _to_device_delta(self, tree):
+        entry = self._entry_for(tree)
+        buffers = entry.pack_host(tree, trust_identity=True)
+        # fence waits done inside pack_host are this path's sync cost
+        fence_s = entry.take_fence_wait()
+        if fence_s:
+            self.ledger.record_wall(0.0, fence_s)
+        retained = self._retained.setdefault(entry, {})
+        names = list(buffers)
+        bucket_bytes = entry.layout.bucket_bytes()
+        dirty = [b for b in names
+                 if retained.get(b, (None, None))[0] != entry.versions[b]]
+        clean = [b for b in names if b not in dirty]
+        if not dirty:
+            memo = self._last_unpack.get(entry)
+            if memo is not None and memo[0] == entry.versions:
+                # fully clean repeat: the previously attached device tree is
+                # immutable and still bit-identical — return it as-is.
+                for b in clean:
+                    self.ledger.record_skip(bucket_bytes[b])
+                self.ledger.delta_calls += 1
+                return memo[1]
+        dev = self._put_batch([buffers[b] for b in dirty], sync=False)
+        for b, arr in zip(dirty, dev):
+            retained[b] = (entry.versions[b], arr)
+        for b in clean:
+            self.ledger.record_skip(bucket_bytes[b])
+        if clean:
+            self.ledger.delta_calls += 1
+        out_leaves = entry.unpack_leaves_jit(
+            {b: retained[b][1] for b in names})
+        out = jax.tree_util.tree_unflatten(entry.layout.treedef,
+                                           list(out_leaves))
+        # every retained device buffer aliases its bucket's ACTIVE staging
+        # buffer (a bucket only rotates when dirty, which replaces the
+        # retained copy), so fence each active buffer with the values that
+        # read it: the new DMA plus this call's gather outputs of THAT
+        # bucket's slots (each leaf slices only its own bucket — fencing
+        # the whole tree on every bucket would pin FENCE_DEPTH generations
+        # of the full device state).
+        for b, arr in zip(dirty, dev):
+            entry.add_fence(b, [arr])
+        for b in names:
+            entry.add_fence(b, [out_leaves[i]
+                                for i in entry._bucket_slots[b]])
+        self._last_unpack[entry] = (dict(entry.versions), out)
+        return out
+
+    # -- sharded: per-device arenas ------------------------------------------
+    def _bucket_sharding(self):
+        mesh = self.sharding.mesh
+        from jax.sharding import NamedSharding, PartitionSpec
+        return NamedSharding(mesh, PartitionSpec(tuple(mesh.axis_names)))
+
+    def _to_device_sharded(self, tree):
+        entry = self._entry_for(tree)
+        buffers = entry.pack_host(tree)
+        dev_bufs = self._put_sharded(buffers)
+        out = entry.unpack(dev_bufs)
+        # same sync-before-rewrite discipline as the single-device path:
+        # shard views alias staging until the fused gather has consumed them
+        return jax.block_until_ready(out)
+
+    def _put_sharded(self, buffers: "engine_lib.Buffers") -> Dict[str, Any]:
+        """Enqueue every (bucket, device) shard, ONE sync, then assemble
+        each bucket into a global array sharded over the whole mesh."""
+        bsh = self._bucket_sharding()
+        plan: Dict[str, list] = {}
+        t0 = time.perf_counter()
+        for b, buf in buffers.items():
+            n = int(buf.shape[0])
+            shards = []
+            for dev, idx in bsh.devices_indices_map((n,)).items():
+                sl = idx[0]
+                lo = 0 if sl.start is None else int(sl.start)
+                hi = n if sl.stop is None else int(sl.stop)
+                shards.append((lo, hi, dev, jax.device_put(buf[lo:hi], dev)))
+            shards.sort(key=lambda s: s[0])
+            plan[b] = shards
+        t1 = time.perf_counter()
+        jax.block_until_ready([s[3] for ss in plan.values() for s in ss])
+        t2 = time.perf_counter()
+        self.ledger.record_wall(t1 - t0, t2 - t1)
+        out: Dict[str, Any] = {}
+        for b, shards in plan.items():
+            itemsize = np.dtype(b).itemsize
+            for lo, hi, dev, _ in shards:
+                self.ledger.record_h2d((hi - lo) * itemsize, device=dev)
+            out[b] = jax.make_array_from_single_device_arrays(
+                (int(buffers[b].shape[0]),), bsh, [s[3] for s in shards])
+        return out
 
     def from_device(self, device_tree, host_tree, paths=None):
         # demarshal: fused scatter repack on device, batched D2H per bucket
@@ -302,8 +504,9 @@ class MarshalScheme(TransferScheme):
 class PointerChainScheme(TransferScheme):
     name = "pointerchain"
 
-    def __init__(self, device: Optional[Any] = None):
-        super().__init__(device)
+    def __init__(self, device: Optional[Any] = None,
+                 sharding: Optional[Any] = None):
+        super().__init__(device, sharding)
         self.refs: tuple[ChainRef, ...] = ()
 
     def to_device(self, tree, paths=None):
@@ -338,9 +541,14 @@ class PointerChainScheme(TransferScheme):
         return insert(host_tree, self.refs, host_leaves)
 
 
+def _marshal_delta(**kw) -> MarshalScheme:
+    return MarshalScheme(delta=True, **kw)
+
+
 SCHEMES: dict[str, Callable[..., TransferScheme]] = {
     "uvm": UVMScheme,
     "marshal": MarshalScheme,
+    "marshal_delta": _marshal_delta,
     "pointerchain": PointerChainScheme,
 }
 

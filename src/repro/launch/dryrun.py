@@ -126,7 +126,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, smoke: bool = False,
                   if layer_probe else [])
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hlo_analysis.cost_dict(compiled)
     coll = hlo_analysis.collective_stats(compiled.as_text())
     n_dev = int(np.prod(mesh.devices.shape))
 

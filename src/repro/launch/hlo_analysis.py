@@ -72,6 +72,19 @@ def collective_stats(hlo_text: str) -> Dict[str, Any]:
             "total_count": total_count}
 
 
+def cost_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalized to one flat dict.
+
+    Depending on the jax/jaxlib version this returns a dict, a singleton
+    list of dicts (one per executable), or None; every caller wants the
+    flat mapping.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return dict(cost) if cost else {}
+
+
 def memory_dict(mem) -> Dict[str, float]:
     if mem is None:
         return {}

@@ -37,7 +37,7 @@ def _sds(shape, dtype):
 def _cost(fn, args, in_sh) -> Dict[str, float]:
     lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    cost = hlo_analysis.cost_dict(compiled)
     coll = hlo_analysis.collective_stats(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),

@@ -75,7 +75,7 @@ def main(argv=None):
         dp_step = make_dp_train_step(api, opt, lr, mesh,
                                      grad_scheme=args.grad_scheme,
                                      compress=args.compress)
-        err = init_error_state(api, args.compress)
+        err = init_error_state(api, args.compress, mesh=mesh)
 
         def step(state, batch):
             new_state, metrics, new_err = dp_step(state, batch, step.err)

@@ -117,6 +117,8 @@ def make_dp_train_step(api: ModelApi, optimizer: Optimizer,
     cfg = api.cfg
     axis = "data"
 
+    dp_size = int(mesh.shape[axis])
+
     def grad_sync(grads, error_state):
         if grad_scheme == "pertensor":
             return (jax.tree_util.tree_map(
@@ -124,7 +126,11 @@ def make_dp_train_step(api: ModelApi, optimizer: Optimizer,
         # gradient arena via the persistent engine: the layout is planned
         # once per treedef (cache shared with the transfer schemes) and the
         # pack/unpack lower to one fused scatter/gather region per bucket.
-        layout = engine_lib.cached_plan(grads, align_elems=128)
+        # Sharding the plan by the dp degree pads every bucket to a
+        # per-device multiple, so the collective payload chunks evenly
+        # across the axis (reduce-scatter-ready; per-device arena layout).
+        layout = engine_lib.cached_plan(grads, align_elems=128,
+                                        sharding=dp_size)
         buffers = engine_lib.pack_traced(grads, layout)
         if compress:
             # exact shared-scale int8 all-reduce with error feedback:
@@ -189,12 +195,17 @@ def make_dp_train_step(api: ModelApi, optimizer: Optimizer,
     return wrapped
 
 
-def init_error_state(api: ModelApi, compress: bool) -> Dict[str, Any]:
+def init_error_state(api: ModelApi, compress: bool,
+                     mesh=None) -> Dict[str, Any]:
     if not compress:
         return {}
     params = api.abstract()
-    # gradients carry the parameter dtype; same cached plan the dp step uses
-    layout = engine_lib.cached_plan(params, align_elems=128)
+    # gradients carry the parameter dtype; same cached plan the dp step
+    # uses, INCLUDING the per-device padding when the mesh is known (the
+    # error-feedback buffers must match the padded bucket sizes exactly).
+    dp_size = int(mesh.shape["data"]) if mesh is not None else 1
+    layout = engine_lib.cached_plan(params, align_elems=128,
+                                    sharding=dp_size)
     pad = lambda n: -(-n // compression.CHUNK) * compression.CHUNK
     return {b: jnp.zeros((pad(n),), jnp.float32)
             for b, n in layout.bucket_sizes.items()}

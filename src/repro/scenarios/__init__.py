@@ -6,24 +6,28 @@ data-motion expectations; families self-register via :func:`register` and
 every benchmark entry point / differential test iterates
 :func:`iter_scenarios`.  See DESIGN.md §6 for the contract.
 """
-from .base import (Motion, Scenario, SCHEME_NAMES, SIZE_PRESETS,
-                   derive_motion, family_names, get_family, iter_scenarios,
-                   register)
-from .driver import Measurement, run_algorithm2, run_scenario
-from .families import (LINEAR_LAYOUTS, chain_access_set, deep_narrow_case,
-                       deep_narrow_chain, deep_narrow_tree, dense_case,
-                       dense_chain, dense_expected, dense_tree,
+from .base import (Motion, PAPER_SCHEMES, Scenario, SCHEME_NAMES,
+                   SIZE_PRESETS, derive_motion, family_names, get_family,
+                   iter_scenarios, register)
+from .driver import (Measurement, SteadyMeasurement, motion_matches,
+                     run_algorithm2, run_scenario, run_steady_scenario)
+from .families import (LINEAR_LAYOUTS, chain_access_set, data_sharding,
+                       deep_narrow_case, deep_narrow_chain, deep_narrow_tree,
+                       dense_case, dense_chain, dense_expected, dense_tree,
                        dense_uvm_access_set, linear_case, linear_chain,
                        linear_expected, linear_tree, linear_used_paths,
                        mixed_dtype_case, mixed_dtype_tree, model_state_case,
-                       ragged_case, ragged_tree, wide_shallow_case,
-                       wide_shallow_tree)
+                       ragged_case, ragged_tree, sharded_case, sharded_tree,
+                       steady_reuse_case, steady_reuse_tree,
+                       wide_shallow_case, wide_shallow_tree)
 
 __all__ = [
-    "Motion", "Scenario", "SCHEME_NAMES", "SIZE_PRESETS", "derive_motion",
+    "Motion", "PAPER_SCHEMES", "Scenario", "SCHEME_NAMES", "SIZE_PRESETS",
+    "derive_motion",
     "family_names", "get_family", "iter_scenarios", "register",
-    "Measurement", "run_algorithm2", "run_scenario",
-    "LINEAR_LAYOUTS", "chain_access_set",
+    "Measurement", "SteadyMeasurement", "motion_matches", "run_algorithm2",
+    "run_scenario", "run_steady_scenario",
+    "LINEAR_LAYOUTS", "chain_access_set", "data_sharding",
     "linear_case", "linear_chain", "linear_expected", "linear_tree",
     "linear_used_paths",
     "dense_case", "dense_chain", "dense_expected", "dense_tree",
@@ -33,4 +37,6 @@ __all__ = [
     "deep_narrow_case", "deep_narrow_chain", "deep_narrow_tree",
     "wide_shallow_case", "wide_shallow_tree",
     "model_state_case",
+    "sharded_case", "sharded_tree",
+    "steady_reuse_case", "steady_reuse_tree",
 ]

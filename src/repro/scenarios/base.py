@@ -25,18 +25,36 @@ import numpy as np
 from repro.core import arena, declare, extract
 
 SIZE_PRESETS = ("smoke", "quick", "full")
-SCHEME_NAMES = ("uvm", "marshal", "pointerchain")
+SCHEME_NAMES = ("uvm", "marshal", "marshal_delta", "pointerchain")
+# the paper's original three schemes: benchmarks reproducing its figures
+# iterate these (marshal_delta re-issues nothing on repeat passes by
+# design, so it cannot satisfy their every-repeat cold-motion assertions —
+# its steady state is measured by benchmarks/transfer_steady.py)
+PAPER_SCHEMES = ("uvm", "marshal", "pointerchain")
 
 
 @dataclasses.dataclass(frozen=True)
 class Motion:
-    """Expected H2D data motion of one Algorithm-2 transfer step."""
+    """Expected H2D data motion of one Algorithm-2 transfer step.
+
+    ``per_device_*`` are declared by sharded scenarios: every device of the
+    mesh must receive exactly those bytes in exactly those DMA batches
+    (uniform split — the per-device arena contract).  ``None`` means the
+    transfer is single-device and only the totals are checked.
+    """
 
     h2d_bytes: int
     h2d_calls: int
+    per_device_bytes: Optional[int] = None
+    per_device_calls: Optional[int] = None
 
     def as_tuple(self) -> Tuple[int, int]:
         return (self.h2d_bytes, self.h2d_calls)
+
+    def per_device_tuple(self) -> Optional[Tuple[int, int]]:
+        if self.per_device_bytes is None:
+            return None
+        return (self.per_device_bytes, self.per_device_calls)
 
 
 def _nbytes(x: Any) -> int:
@@ -45,35 +63,53 @@ def _nbytes(x: Any) -> int:
 
 def derive_motion(tree: Any, used_paths: Sequence[str],
                   uvm_access: Optional[Sequence[str]], scheme_name: str,
-                  align_elems: int = 1) -> Motion:
+                  align_elems: int = 1, num_shards: int = 1) -> Motion:
     """Structural derivation of the expected data motion (no transfers run).
 
     * marshal       — Alg. 1 moves every dtype bucket once: bytes =
                       ``determineTotalBytes`` (the arena plan's bucket
                       bytes), calls = number of dtype buckets.
+    * marshal_delta — identical on a COLD pass (everything is dirty);
+                      steady-state deltas are checked separately against
+                      ``Scenario.steady_expected``.
     * pointerchain  — one DMA per declared chain (interior chains expand to
                       their leaves), bytes = the extracted leaves.
     * uvm           — one fault per distinct leaf under the access set
                       (``uvm_access`` if declared, else ``used_paths``).
 
+    ``num_shards > 1`` derives the per-device arena motion instead: marshal
+    buckets are tail-padded to a per-device multiple and every transfer
+    granule is split evenly over the mesh, so totals multiply the DMA count
+    by the device count and the per-device fields carry the uniform split.
+
     This is the second, independent source the differential tests compare
     the ledger against; families with closed-form paper expectations
     (linear Eq. 1-2, dense Eq. 3) provide a third via ``Scenario.expected``.
     """
-    if scheme_name == "marshal":
-        layout = arena.plan(tree, align_elems)
-        return Motion(sum(layout.bucket_bytes().values()),
-                      len(layout.bucket_sizes))
+    k = int(num_shards)
+    if scheme_name in ("marshal", "marshal_delta"):
+        layout = arena.plan(tree, align_elems, shard_multiple=k)
+        total = sum(layout.bucket_bytes().values())
+        nb = len(layout.bucket_sizes)
+        if k == 1:
+            return Motion(total, nb)
+        return Motion(total, nb * k, total // k, nb)
     if scheme_name == "pointerchain":
         refs = declare(tree, *used_paths)
-        return Motion(sum(_nbytes(l) for l in extract(tree, refs)), len(refs))
+        total = sum(_nbytes(l) for l in extract(tree, refs))
+        if k == 1:
+            return Motion(total, len(refs))
+        return Motion(total, len(refs) * k, total // k, len(refs))
     if scheme_name == "uvm":
         refs = declare(tree, *(uvm_access or used_paths))
         import jax
 
         leaves = jax.tree_util.tree_leaves(tree)
         faulted = sorted({r.flat_index for r in refs})
-        return Motion(sum(_nbytes(leaves[i]) for i in faulted), len(faulted))
+        total = sum(_nbytes(leaves[i]) for i in faulted)
+        if k == 1:
+            return Motion(total, len(faulted))
+        return Motion(total, len(faulted) * k, total // k, len(faulted))
     raise KeyError(f"unknown scheme {scheme_name!r}; options: {SCHEME_NAMES}")
 
 
@@ -99,6 +135,29 @@ class Scenario:
     uvm_access: Optional[Tuple[str, ...]] = None
     expected: Optional[Mapping[str, Motion]] = None
     params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    # sharded scenarios: a zero-arg builder for the NamedSharding target
+    # (built lazily so family registration never touches jax device state)
+    # plus the mesh size the closed forms were derived at.
+    sharding: Optional[Callable[[], Any]] = None
+    num_shards: int = 1
+    # steady_reuse scenarios: exact per-pass Motion of a steady-state delta
+    # transfer after mutating params["mutate_path"] (the dirty bucket only).
+    steady_expected: Optional[Motion] = None
+
+    def scheme_names(self) -> Tuple[str, ...]:
+        """The schemes this scenario runs under: delta transfers are
+        single-device, so sharded scenarios exclude ``marshal_delta``."""
+        if self.sharding is not None:
+            return tuple(s for s in SCHEME_NAMES if s != "marshal_delta")
+        return SCHEME_NAMES
+
+    def make_scheme(self, scheme_name: str):
+        """Scheme instance aimed at this scenario's target (sharded or not)."""
+        from repro.core import make_scheme as _make
+
+        if self.sharding is not None:
+            return _make(scheme_name, sharding=self.sharding())
+        return _make(scheme_name)
 
     def expected_motion(self, scheme_name: str, tree: Any = None,
                         align_elems: int = 1) -> Motion:
@@ -113,7 +172,8 @@ class Scenario:
         if tree is None:
             tree = self.build()
         return derive_motion(tree, self.used_paths, self.uvm_access,
-                             scheme_name, align_elems)
+                             scheme_name, align_elems,
+                             num_shards=self.num_shards)
 
     def validate(self, tree: Any = None) -> None:
         """Check the scenario contract (DESIGN.md §6) on the built tree."""
@@ -138,6 +198,16 @@ class Scenario:
                 raise ValueError(
                     f"{self.name}: uvm_access does not cover used chains "
                     f"{missing} — UVM could not extract them for the kernel")
+        if self.num_shards > 1:
+            # per-leaf schemes shard each transferred leaf over the mesh's
+            # first dimension: every accessed leaf must split evenly.
+            access = declare(tree, *(self.uvm_access or self.used_paths))
+            for r in {*used, *access}:
+                arr = np.asarray(leaves[r.flat_index])
+                if arr.ndim < 1 or arr.shape[0] % self.num_shards:
+                    raise ValueError(
+                        f"{self.name}: leaf {r.path} (shape {arr.shape}) "
+                        f"does not split into {self.num_shards} shards")
 
 
 # ---------------------------------------------------------------------------

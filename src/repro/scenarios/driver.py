@@ -36,6 +36,21 @@ class Measurement:
     ok: bool                              # Algorithm 2 line-7 value check
     motion_ok: Optional[bool] = None      # ledger == analytic expectation
     expected: Optional[Motion] = None
+    skipped_bytes: int = 0                # delta path: bytes proven clean
+    per_device: Optional[dict] = None     # {device: (bytes, calls)}
+
+
+def motion_matches(ledger, expected: Motion, num_shards: int = 1) -> bool:
+    """Exact ledger == expectation, including the per-device split when the
+    expectation declares one (every device, uniformly)."""
+    if (ledger.h2d_bytes, ledger.h2d_calls) != expected.as_tuple():
+        return False
+    want = expected.per_device_tuple()
+    if want is None:
+        return True
+    per_dev = ledger.per_device()
+    return len(per_dev) == num_shards and \
+        all(got == want for got in per_dev.values())
 
 
 # 1.5 is exactly representable in every float dtype the scenarios use —
@@ -114,7 +129,9 @@ def run_algorithm2(tree: Any, used_paths: Sequence[str],
     kernel_us = (time.perf_counter() - t0) / max(1, kernel_repeats) * 1e6
 
     return Measurement(name, wall, kernel_us,
-                       scheme.ledger.h2d_bytes, scheme.ledger.h2d_calls, ok)
+                       scheme.ledger.h2d_bytes, scheme.ledger.h2d_calls, ok,
+                       skipped_bytes=scheme.ledger.skipped_bytes,
+                       per_device=scheme.ledger.per_device() or None)
 
 
 def run_scenario(sc: Scenario, scheme_name: Optional[str] = None, *,
@@ -122,18 +139,71 @@ def run_scenario(sc: Scenario, scheme_name: Optional[str] = None, *,
                  kernel_repeats: int = 1) -> Measurement:
     """Algorithm 2 over a registry scenario, with the differential motion
     check: ``motion_ok`` is True iff the ledger matched the scenario's
-    analytic expectation exactly (DESIGN.md §4 invariant 4)."""
+    analytic expectation exactly (DESIGN.md §4 invariant 4) — including the
+    per-device split for sharded scenarios."""
     if tree is None:
         tree = sc.build()
     if scheme is None:
         if scheme_name is None:
             raise ValueError("need scheme_name or a scheme instance")
-        scheme = make_scheme(scheme_name)
+        scheme = sc.make_scheme(scheme_name)
     m = run_algorithm2(tree, list(sc.used_paths), scheme_name,
                        uvm_access=list(sc.uvm_access) if sc.uvm_access
                        else None,
                        kernel_repeats=kernel_repeats, scheme=scheme)
     m.expected = sc.expected_motion(
         m.scheme, tree, align_elems=getattr(scheme, "align_elems", 1))
-    m.motion_ok = (m.h2d_bytes, m.h2d_calls) == m.expected.as_tuple()
+    m.motion_ok = motion_matches(scheme.ledger, m.expected, sc.num_shards)
     return m
+
+
+@dataclasses.dataclass
+class SteadyMeasurement:
+    """One steady-state delta pass: what moved, what was proven clean."""
+
+    h2d_bytes: int
+    h2d_calls: int
+    skipped_bytes: int
+    wall_us: float
+    ok: bool                     # round-trip still equals the host tree
+    motion_ok: bool              # ledger == sc.steady_expected exactly
+
+
+def run_steady_scenario(sc: Scenario, *, passes: int = 3,
+                        scheme: Optional[Any] = None) -> List[SteadyMeasurement]:
+    """Steady-state harness for ``steady_reuse`` scenarios: warm the delta
+    scheme with one full transfer, then repeatedly mutate the leaf at
+    ``params['mutate_path']`` and re-transfer.  Every steady pass must ship
+    EXACTLY the mutated leaf's dtype bucket (``sc.steady_expected``,
+    ledger-verified equality, not a bound) and skip every other bucket; the
+    round-trip must keep matching the mutated host tree leaf-for-leaf.
+    """
+    from repro.core import TreePath
+
+    if sc.steady_expected is None or "mutate_path" not in sc.params:
+        raise ValueError(f"{sc.name} is not a steady_reuse scenario")
+    tree = sc.build()
+    scheme = scheme or make_scheme("marshal_delta")
+    scheme.to_device(tree)                      # warm-up: full cold transfer
+    full_bytes = sum(scheme.layout.bucket_bytes().values())
+    tp = TreePath.parse(sc.params["mutate_path"])
+    out: List[SteadyMeasurement] = []
+    for i in range(passes):
+        leaf = np.asarray(tp.resolve(tree))
+        tree = tp.set(tree, leaf + np.ones((), leaf.dtype))
+        scheme.ledger.reset()
+        t0 = time.perf_counter()
+        dev = scheme.to_device(tree)
+        jax.block_until_ready(dev)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        led = scheme.ledger
+        motion_ok = (led.h2d_bytes, led.h2d_calls) \
+            == sc.steady_expected.as_tuple() \
+            and led.h2d_bytes + led.skipped_bytes == full_bytes
+        ok = all(np.array_equal(np.asarray(a), np.asarray(b))
+                 for a, b in zip(jax.tree_util.tree_leaves(dev),
+                                 jax.tree_util.tree_leaves(tree)))
+        out.append(SteadyMeasurement(led.h2d_bytes, led.h2d_calls,
+                                     led.skipped_bytes, wall_us, ok,
+                                     motion_ok))
+    return out

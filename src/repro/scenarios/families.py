@@ -382,3 +382,107 @@ def _model_state_family(size: str) -> List[Scenario]:
     archs = ["llama3.2-1b"] if size == "smoke" \
         else ["llama3.2-1b", "mamba2-1.3b"]
     return [model_state_case(a) for a in archs]
+
+
+# ---------------------------------------------------------------------------
+# sharded — per-device arenas over the whole host mesh
+# ---------------------------------------------------------------------------
+
+def data_sharding():
+    """A 1-D "data" mesh over every available device, leaves split on dim 0
+    — built lazily so importing the registry never touches jax devices."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    return NamedSharding(mesh, PartitionSpec("data"))
+
+
+def sharded_tree(n: int, k: int, seed: int = 13) -> Any:
+    """Two f32 payloads + one i32 id table, all 1-D with sizes divisible by
+    the mesh size ``k`` so every transfer granule splits evenly per device."""
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.standard_normal(n).astype(np.float32),
+        "v": rng.standard_normal(3 * n).astype(np.float32),
+        "ids": np.arange(4 * k, dtype=np.int32),
+    }
+
+
+def sharded_expected(n: int, k: int) -> dict:
+    """Closed-form per-device Motion on a k-device mesh: marshal pads each
+    dtype bucket to a multiple of k and ships one contiguous sub-range per
+    (bucket, device); per-leaf schemes split each granule k ways."""
+    f32_elems = n + 3 * n                 # already divisible by k (n = 16k·…)
+    i32_elems = 4 * k
+    marshal_bytes = _F32 * f32_elems + _I32 * i32_elems
+    used_bytes = _F32 * (n + 3 * n)       # w + v
+    if k == 1:
+        return {"marshal": Motion(marshal_bytes, 2),
+                "marshal_delta": Motion(marshal_bytes, 2),
+                "uvm": Motion(used_bytes, 2),
+                "pointerchain": Motion(used_bytes, 2)}
+    per_leaf = Motion(used_bytes, 2 * k, used_bytes // k, 2)
+    return {"marshal": Motion(marshal_bytes, 2 * k, marshal_bytes // k, 2),
+            "uvm": per_leaf, "pointerchain": per_leaf}
+
+
+def sharded_case(n: int, k: int) -> Scenario:
+    used = ("w", "v")
+    return Scenario(
+        name=f"sharded_n{n}_dev{k}",
+        family="sharded",
+        build=functools.partial(sharded_tree, n, k),
+        used_paths=used,
+        uvm_access=used,
+        expected=sharded_expected(n, k),
+        sharding=data_sharding,
+        num_shards=k,
+        params=dict(n=n, devices=k))
+
+
+@register("sharded")
+def _sharded_family(size: str) -> List[Scenario]:
+    import jax
+
+    k = jax.device_count()
+    n = (16 if size == "smoke" else 256) * k
+    return [sharded_case(n, k)]
+
+
+# ---------------------------------------------------------------------------
+# steady_reuse — the delta transfer steady state
+# ---------------------------------------------------------------------------
+
+def steady_reuse_tree(n: int, seed: int = 17) -> Any:
+    """Production-shaped steady state: a hot f32 part that changes every
+    step, frozen bf16 weights and an i32 id table that never do.  Each dtype
+    is its own marshalling bucket, so a delta transfer's dirty set is
+    exactly the hot bucket."""
+    rng = np.random.default_rng(seed)
+    return {
+        "hot": {"a": rng.standard_normal(n).astype(np.float32),
+                "b": rng.standard_normal(n // 2).astype(np.float32)},
+        "frozen": {"w": rng.standard_normal(4 * n).astype("bfloat16")},
+        "meta": {"ids": np.arange(2 * n, dtype=np.int32)},
+    }
+
+
+def steady_reuse_case(n: int) -> Scenario:
+    used = ("hot.a", "frozen.w")
+    f32_bucket = _F32 * (n + n // 2)      # hot.a + hot.b share the f32 bucket
+    return Scenario(
+        name=f"steady_reuse_n{n}",
+        family="steady_reuse",
+        build=functools.partial(steady_reuse_tree, n),
+        used_paths=used,
+        uvm_access=tuple(["meta.ids"] + list(used)),
+        # steady state: mutating hot.a dirties ONLY the f32 bucket — one DMA
+        # carrying that bucket's bytes, everything else proven clean.
+        steady_expected=Motion(f32_bucket, 1),
+        params=dict(n=n, mutate_path="hot.a"))
+
+
+@register("steady_reuse")
+def _steady_reuse_family(size: str) -> List[Scenario]:
+    return [steady_reuse_case(64 if size == "smoke" else 2048)]

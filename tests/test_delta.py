@@ -1,0 +1,207 @@
+"""Dirty-bucket delta transfers: correctness of the incremental engine.
+
+The satellite contract (ISSUE 3):
+  * mutate exactly one leaf -> ONLY its dtype bucket ships (ledger-verified
+    equality, not a bound) and the round trip still equals copy.deepcopy;
+  * a stale-fingerprint fake (version counters that lie) must FAIL the
+    Algorithm-2 line-7 check — the harness catches fingerprint bugs;
+  * version counters are monotone under interleaved pack/mark_dirty
+    (hypothesis property — in tests/test_delta_properties.py behind
+    importorskip, so THIS file runs everywhere).
+"""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import MarshalScheme, clear_cache, make_scheme
+from repro.scenarios import iter_scenarios, run_scenario, run_steady_scenario
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    clear_cache()
+    yield
+    clear_cache()
+
+
+def _tree(seed=0, n=64):
+    rng = np.random.default_rng(seed)
+    return {"f32": {"a": rng.standard_normal(n).astype(np.float32),
+                    "b": rng.standard_normal(2 * n).astype(np.float32)},
+            "i32": np.arange(n, dtype=np.int32),
+            "bf16": rng.standard_normal(4 * n).astype("bfloat16")}
+
+
+def _leaves_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        got, want = np.asarray(x), np.asarray(y)
+        assert got.dtype == want.dtype and got.shape == want.shape
+        np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------- delta ledger
+
+def test_clean_repeat_ships_nothing():
+    tree = _tree()
+    s = make_scheme("marshal_delta")
+    s.to_device(tree)
+    full = sum(s.layout.bucket_bytes().values())
+    assert s.ledger.h2d_bytes == full        # cold pass = full marshal
+    s.ledger.reset()
+    dev = s.to_device(tree)
+    assert (s.ledger.h2d_bytes, s.ledger.h2d_calls) == (0, 0)
+    assert s.ledger.skipped_bytes == full    # invariant-4 exactness
+    assert s.ledger.delta_calls == 1
+    jax.block_until_ready(dev)
+    _leaves_equal(dev, tree)
+
+
+def test_one_leaf_mutation_ships_only_its_bucket():
+    tree = _tree()
+    s = make_scheme("marshal_delta")
+    s.to_device(tree)
+    bb = s.layout.bucket_bytes()
+    full = sum(bb.values())
+    # replace exactly one leaf (a NEW array: the functional-update pattern)
+    t2 = copy.deepcopy(tree)
+    t2["bf16"] = np.asarray(tree["bf16"]) + np.ones((), tree["bf16"].dtype)
+    s.ledger.reset()
+    dev = s.to_device(t2)
+    assert (s.ledger.h2d_bytes, s.ledger.h2d_calls) == (bb["bfloat16"], 1)
+    assert s.ledger.skipped_bytes == full - bb["bfloat16"]
+    # and the round trip still equals a deepcopy reference
+    ref = copy.deepcopy(t2)
+    back = s.from_device(dev, t2)
+    _leaves_equal(back, ref)
+
+
+def test_in_place_mutation_with_mark_dirty():
+    tree = _tree()
+    s = make_scheme("marshal_delta")
+    s.to_device(tree)
+    bb = s.layout.bucket_bytes()
+    tree["f32"]["a"][:] = -7.0               # in place: identity unchanged
+    s.mark_dirty(tree, "f32.a")
+    s.ledger.reset()
+    dev = s.to_device(tree)
+    assert (s.ledger.h2d_bytes, s.ledger.h2d_calls) == (bb["float32"], 1)
+    jax.block_until_ready(dev)
+    np.testing.assert_allclose(np.asarray(dev["f32"]["a"]), -7.0)
+
+
+def test_in_place_mutation_without_mark_dirty_is_the_documented_stale():
+    """trust_identity skips leaves whose object identity is unchanged —
+    the §7 contract says in-place mutators MUST mark_dirty.  Verify the
+    hazard is real (and therefore that mark_dirty is load-bearing)."""
+    tree = _tree()
+    s = make_scheme("marshal_delta")
+    s.to_device(tree)
+    tree["f32"]["a"][:] = -7.0
+    s.ledger.reset()
+    dev = s.to_device(tree)
+    assert s.ledger.h2d_bytes == 0           # fingerprint did not move
+    jax.block_until_ready(dev)
+    assert not np.allclose(np.asarray(dev["f32"]["a"]), -7.0)
+
+
+def test_bump_version_forces_reship():
+    tree = _tree()
+    s = make_scheme("marshal_delta")
+    s.to_device(tree)
+    bb = s.layout.bucket_bytes()
+    s._entry.bump_version("float32")
+    s.ledger.reset()
+    s.to_device(tree)
+    assert (s.ledger.h2d_bytes, s.ledger.h2d_calls) == (bb["float32"], 1)
+
+
+def test_double_buffer_preserves_previous_device_tree():
+    """The per-buffer fence discipline: a rewrite goes to the OTHER buffer,
+    so device values from the previous pass keep their bytes even though
+    the transfer no longer blocks before returning."""
+    tree = _tree(seed=1)
+    s = make_scheme("marshal_delta")
+    dev1 = s.to_device(tree)
+    t2 = jax.tree_util.tree_map(
+        lambda x: np.asarray(x) + np.ones((), np.asarray(x).dtype), tree)
+    dev2 = s.to_device(t2)
+    t3 = jax.tree_util.tree_map(
+        lambda x: np.asarray(x) + np.ones((), np.asarray(x).dtype), t2)
+    dev3 = s.to_device(t3)                   # rotates back onto dev1's buffers
+    jax.block_until_ready((dev1, dev2, dev3))
+    _leaves_equal(dev1, tree)
+    _leaves_equal(dev2, t2)
+    _leaves_equal(dev3, t3)
+
+
+def test_delta_schemes_do_not_share_shipped_state():
+    """Entries are global, but WHAT a scheme already shipped is per scheme
+    instance: a fresh scheme's first pass is always a full (cold) ship."""
+    tree = _tree()
+    a = make_scheme("marshal_delta")
+    a.to_device(tree)
+    b = make_scheme("marshal_delta")
+    b.to_device(tree)
+    full = sum(b.layout.bucket_bytes().values())
+    assert b.ledger.h2d_bytes == full
+
+
+# ------------------------------------------ stale fingerprints must be caught
+
+class _StaleFingerprintDelta(MarshalScheme):
+    """A broken delta engine: pack_host runs, but the version counters are
+    frozen at their warm-up values — so every later pass claims every
+    bucket is clean and ships stale device buffers."""
+
+    def __init__(self):
+        super().__init__(delta=True)
+
+    def _entry_for(self, tree):
+        entry = super()._entry_for(tree)
+        if not hasattr(entry, "_frozen_versions"):
+            entry._frozen_versions = None
+        orig_pack = entry.pack_host
+
+        def lying_pack(t, **kw):
+            out = orig_pack(t, **kw)
+            if entry._frozen_versions is None:
+                entry._frozen_versions = dict(entry.versions)
+            else:
+                entry.versions.update(entry._frozen_versions)
+            return out
+
+        entry.pack_host = lying_pack
+        return entry
+
+
+def test_stale_fingerprint_fails_algorithm2_check():
+    """Differential proof the line-7 check discriminates fingerprint bugs:
+    an honest delta scheme passes twice on mutated trees, the lying one
+    passes its warm-up and FAILS once the data changes under it."""
+    sc = next(s for s in iter_scenarios("smoke") if s.family == "mixed_dtype")
+    honest = make_scheme("marshal_delta")
+    assert run_scenario(sc, scheme=honest).ok
+    assert run_scenario(sc, scheme=honest).ok
+    liar = _StaleFingerprintDelta()
+    clear_cache()                    # fresh entry so the wrap sees warm-up
+    assert run_scenario(sc, scheme=liar).ok          # warm-up ships for real
+    # new tree values, same shapes: the liar's fingerprints say "clean"
+    tree2 = jax.tree_util.tree_map(
+        lambda x: np.asarray(x) + np.ones((), np.asarray(x).dtype)
+        if np.asarray(x).dtype.kind == "f" else np.asarray(x), sc.build())
+    m = run_scenario(sc, scheme=liar, tree=tree2)
+    assert not m.ok, ("a scheme with stale fingerprints passed the "
+                      "Algorithm-2 value check — the check is vacuous")
+
+
+# ----------------------------------------------------- steady_reuse scenarios
+
+def test_steady_reuse_scenario_contract():
+    sc = next(s for s in iter_scenarios("smoke")
+              if s.family == "steady_reuse")
+    for m in run_steady_scenario(sc, passes=3):
+        assert m.ok and m.motion_ok
+        assert (m.h2d_bytes, m.h2d_calls) == sc.steady_expected.as_tuple()

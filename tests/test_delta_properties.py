@@ -1,0 +1,54 @@
+"""Hypothesis properties of the delta engine's version counters.
+
+Separate file behind importorskip (the repo pattern for hypothesis suites,
+see tests/test_arena_properties.py): the deterministic delta tests in
+tests/test_delta.py must keep running even where hypothesis is absent.
+"""
+import numpy as np
+import pytest
+
+from repro.core import clear_cache, get_entry
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+def _tree(seed=0, n=8):
+    rng = np.random.default_rng(seed)
+    return {"f32": {"a": rng.standard_normal(n).astype(np.float32),
+                    "b": rng.standard_normal(2 * n).astype(np.float32)},
+            "i32": np.arange(n, dtype=np.int32),
+            "bf16": rng.standard_normal(4 * n).astype("bfloat16")}
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["pack_same", "pack_new",
+                                           "mark_dirty", "bump"]),
+                          st.integers(0, 2**31 - 1)),
+                min_size=1, max_size=12))
+def test_versions_monotone_under_interleaved_pack_mark_dirty(ops):
+    """Bucket version counters never decrease, whatever the interleaving of
+    packs (same tree / fresh values), mark_dirty and bump_version — and a
+    pack of unchanged bytes never advances them."""
+    clear_cache()
+    tree = _tree(seed=3)
+    entry = get_entry(tree)
+    entry.pack_host(tree)
+    last = dict(entry.versions)
+    packed = tree
+    for op, seed in ops:
+        if op == "pack_same":
+            # re-packing EXACTLY what staging already holds never bumps
+            before = dict(entry.versions)
+            entry.pack_host(packed, trust_identity=True)
+            assert entry.versions == before
+        elif op == "pack_new":
+            packed = _tree(seed=seed)
+            entry.pack_host(packed)
+        elif op == "mark_dirty":
+            entry.mark_dirty("float32")
+        else:
+            entry.bump_version("int32")
+        for b, v in entry.versions.items():
+            assert v >= last[b], f"bucket {b} version went backwards"
+        last = dict(entry.versions)

@@ -46,7 +46,7 @@ for scheme, compress in (("pertensor", False), ("arena", False),
     step = make_dp_train_step(api, opt, constant(1e-2), mesh,
                               grad_scheme=scheme, compress=compress)
     state = train_state(api, opt, jax.random.PRNGKey(0))
-    err = init_error_state(api, compress)
+    err = init_error_state(api, compress, mesh=mesh)
     losses = []
     for s in range(8):
         b = data.batch(s)

@@ -32,13 +32,14 @@ def fresh_cache():
 def test_layout_cache_hit_across_identical_treedefs(tree):
     l1 = cached_plan(tree)
     stats = cache_stats()
-    assert stats == {"hits": 0, "misses": 1}
+    assert (stats["hits"], stats["misses"]) == (0, 1)
     # a DIFFERENT tree object with the same structure/shapes: cache hit,
     # same layout object
     other = jax.tree_util.tree_map(lambda x: x * 2, tree)
     l2 = cached_plan(other)
     assert l2 is l1
-    assert cache_stats() == {"hits": 1, "misses": 1}
+    stats = cache_stats()
+    assert (stats["hits"], stats["misses"]) == (1, 1)
 
 
 def test_layout_cache_miss_on_shape_or_alignment_change(tree):
@@ -77,9 +78,45 @@ def test_entry_cache_is_lru_bounded(monkeypatch):
     for n in (3, 5, 7):
         get_entry({"x": jnp.ones(n)})
     assert len(engine_lib._ENTRY_CACHE) == 2
+    assert cache_stats()["entry_evictions"] == 1
     # evicted entries are simply re-created on next use
     e = get_entry({"x": jnp.ones(3)})
     assert e.layout.bucket_sizes == {"float32": 3}
+
+
+def test_layout_cache_is_lru_bounded(monkeypatch):
+    """Satellite: the layout cache must not grow without bound either —
+    long-running loops over many shapes stay at the configured cap, and
+    evictions are reported by cache_stats()."""
+    monkeypatch.setattr(engine_lib, "LAYOUT_CACHE_MAX", 4)
+    for n in range(10):
+        cached_plan({"x": jnp.ones(n + 1)})
+    assert len(engine_lib._LAYOUT_CACHE) == 4
+    stats = cache_stats()
+    assert stats["layout_evictions"] == 6
+    assert stats["layout_size"] == 4
+    # most-recently-used layouts survived; an evicted one is a fresh miss
+    cached_plan({"x": jnp.ones(10)})
+    assert cache_stats()["hits"] >= 1
+    cached_plan({"x": jnp.ones(1)})
+    assert cache_stats()["misses"] == 11
+
+
+def test_set_cache_limits_trims_immediately():
+    from repro.core import set_cache_limits
+
+    old_layout, old_entry = (engine_lib.LAYOUT_CACHE_MAX,
+                             engine_lib.ENTRY_CACHE_MAX)
+    try:
+        for n in range(6):
+            get_entry({"x": jnp.ones(n + 1)})
+        set_cache_limits(layout_max=2, entry_max=2)
+        assert len(engine_lib._LAYOUT_CACHE) == 2
+        assert len(engine_lib._ENTRY_CACHE) == 2
+        assert cache_stats()["entry_evictions"] == 4
+    finally:
+        engine_lib.LAYOUT_CACHE_MAX = old_layout
+        engine_lib.ENTRY_CACHE_MAX = old_entry
 
 
 def test_two_schemes_share_engine_state(tree):
