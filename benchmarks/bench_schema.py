@@ -14,26 +14,50 @@ current-schema rows.
   v2              + schema, skipped_bytes, delta_calls, sharded, n_devices,
                   per_device_bytes, per_device_calls, steady_wall_us,
                   steady_h2d_bytes
+  v3              + spec (the canonical TransferSpec string the row ran
+                  under), h2d_bytes_by_device, skipped_bytes_by_device
+                  (the first-pass per-device ledger maps), steady_skipped_bytes
+
+The ledger-derived column defaults come from ``TransferLedger().as_dict()``
+rather than a hand-maintained list, so a ledger field added upstream
+becomes a schema column (with its zero default) in one place.
 """
 from __future__ import annotations
 
 import json
 from typing import Any, Dict, List, Optional, Tuple
 
-SCHEMA_VERSION = 2
+from repro.core import TransferLedger
+
+SCHEMA_VERSION = 3
+
+# the ledger fields that are persisted per row, with the ledger's own
+# zero-state as their defaults (timings are reported as *_us columns
+# instead, and the d2h direction is not benched here).
+LEDGER_COLUMNS = ("h2d_bytes", "h2d_calls", "skipped_bytes", "delta_calls",
+                  "h2d_bytes_by_device", "skipped_bytes_by_device")
+_LEDGER_DEFAULTS = {k: v for k, v in TransferLedger().as_dict().items()
+                    if k in LEDGER_COLUMNS}
 
 # column -> default, in schema order; upgrading fills what a row lacks.
 V2_DEFAULTS: Dict[str, Any] = {
     "schema": SCHEMA_VERSION,
     "family": "",
-    "skipped_bytes": 0,       # delta: bytes proven clean and not moved
-    "delta_calls": 0,         # cached passes that skipped >=1 bucket
+    "skipped_bytes": _LEDGER_DEFAULTS["skipped_bytes"],
+    "delta_calls": _LEDGER_DEFAULTS["delta_calls"],
     "sharded": False,
     "n_devices": 1,
     "per_device_bytes": None,  # uniform per-device split (sharded rows)
     "per_device_calls": None,
-    "steady_wall_us": None,    # steady_reuse x delta: per-pass wall
-    "steady_h2d_bytes": None,  # steady_reuse x delta: per-pass dirty bytes
+    "steady_wall_us": None,    # steady x delta: per-pass wall
+    "steady_h2d_bytes": None,  # steady x delta: per-pass dirty bytes
+}
+
+V3_DEFAULTS: Dict[str, Any] = {
+    "spec": "",                # canonical TransferSpec string ("" pre-v3)
+    "h2d_bytes_by_device": _LEDGER_DEFAULTS["h2d_bytes_by_device"],
+    "skipped_bytes_by_device": _LEDGER_DEFAULTS["skipped_bytes_by_device"],
+    "steady_skipped_bytes": None,  # steady x delta: per-pass clean bytes
 }
 
 
@@ -44,8 +68,11 @@ def upgrade_row(row: Dict[str, Any]) -> Dict[str, Any]:
         raise ValueError(f"row schema {version} is newer than this reader "
                          f"({SCHEMA_VERSION}); update benchmarks/bench_schema.py")
     out = dict(row)
-    for key, default in V2_DEFAULTS.items():
-        out.setdefault(key, default)
+    for defaults in (V2_DEFAULTS, V3_DEFAULTS):
+        for key, default in defaults.items():
+            out.setdefault(key, dict(default) if isinstance(default, dict)
+                           else default)
+    out["schema"] = SCHEMA_VERSION
     return out
 
 

@@ -12,7 +12,7 @@ from __future__ import annotations
 import sys
 from typing import List
 
-from repro.core import make_scheme
+from repro.core import transfer_scheme
 from repro.scenarios import PAPER_SCHEMES, dense_case, run_scenario
 
 
@@ -28,7 +28,7 @@ def run(qs=(4, 8), ns=(10**3, 10**4), depth=3, out=sys.stdout,
             base = None
             for scheme in PAPER_SCHEMES:
                 best = None
-                inst = make_scheme(scheme)  # reused across repeats
+                inst = transfer_scheme(scheme)  # reused across repeats
                 for _ in range(repeats):
                     m = run_scenario(sc, scheme, scheme=inst, tree=tree)
                     assert m.ok, f"check failed: {scheme} q={q} n={n}"

@@ -11,7 +11,7 @@ from __future__ import annotations
 import sys
 from typing import List
 
-from repro.core import make_scheme
+from repro.core import transfer_scheme
 from repro.scenarios import LINEAR_LAYOUTS, PAPER_SCHEMES, linear_case, run_scenario
 
 
@@ -28,7 +28,7 @@ def run(ks=(2, 6, 10), ns=(10**3, 10**5), layouts=LINEAR_LAYOUTS,
                 base = None
                 for scheme in PAPER_SCHEMES:
                     best = None
-                    inst = make_scheme(scheme)  # reused across repeats
+                    inst = transfer_scheme(scheme)  # reused across repeats
                     for _ in range(repeats):
                         m = run_scenario(sc, scheme, scheme=inst, tree=tree)
                         assert m.ok, f"check failed: {scheme} k={k} n={n}"

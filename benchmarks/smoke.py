@@ -1,64 +1,93 @@
-"""Registry smoke sweep: every scenario x every scheme at tiny sizes.
+"""Registry smoke sweep: every scenario x every transfer spec at tiny sizes.
 
 ``python -m benchmarks.run --smoke`` — the CI job that catches harness
-breakage (a scenario that stops building, a scheme whose data motion
-drifts off its analytic expectation, a check that goes vacuous) without
-waiting for someone to regenerate BENCH_transfer.json.
+breakage (a scenario that stops building, a spec whose data motion drifts
+off its analytic expectation, a check that goes vacuous) without waiting
+for someone to regenerate BENCH_transfer.json.
+
+``--spec`` narrows the sweep to the named spec strings (e.g.
+``marshal+delta@dp8`` on the forced-8-device CI host); any requested delta
+spec is ALSO driven through the steady-state harness of every
+steady-capable scenario, so the per-device equality
+``h2d_bytes_by_device[d] + skipped_bytes_by_device[d] == full sharded
+marshal bytes[d]`` is checked on every device even for scenarios that
+declare their own steady state unsharded.
 """
 from __future__ import annotations
 
 import sys
 import time
-from typing import List
+from typing import List, Optional, Sequence
 
+from repro.core import TransferSpec
 from repro.scenarios import iter_scenarios, run_scenario, run_steady_scenario
 
 
-def run(out=sys.stdout, size: str = "smoke") -> List[dict]:
+def _steady_capable(sc) -> bool:
+    return "mutate_path" in sc.params or "mutate_paths" in sc.params
+
+
+def run(out=sys.stdout, size: str = "smoke",
+        specs: Optional[Sequence[str]] = None) -> List[dict]:
+    requested = [TransferSpec.parse(s) for s in specs] if specs else None
     rows: List[dict] = []
     failures: List[str] = []
-    print("scenario,scheme,wall_us,h2d_bytes,h2d_calls,check,motion", file=out)
+    print("scenario,spec,wall_us,h2d_bytes,h2d_calls,check,motion", file=out)
     t0 = time.time()
     for sc in iter_scenarios(size):
         tree = sc.build()
         sc.validate(tree)
-        for name in sc.scheme_names():
-            m = run_scenario(sc, name, tree=tree)
-            rows.append(dict(scenario=sc.name, scheme=name,
+        for spec in sc.specs():
+            if requested is not None and not any(
+                    str(spec) == str(r) or spec.name == str(r)
+                    for r in requested):
+                continue
+            m = run_scenario(sc, spec, tree=tree)
+            rows.append(dict(scenario=sc.name, spec=str(spec),
+                             scheme=spec.name,
                              wall_us=round(m.wall_us, 1),
                              h2d_bytes=m.h2d_bytes, h2d_calls=m.h2d_calls,
                              ok=m.ok, motion_ok=m.motion_ok))
-            print(f"{sc.name},{name},{m.wall_us:.1f},{m.h2d_bytes},"
+            print(f"{sc.name},{spec},{m.wall_us:.1f},{m.h2d_bytes},"
                   f"{m.h2d_calls},{'ok' if m.ok else 'FAIL'},"
                   f"{'ok' if m.motion_ok else 'FAIL'}", file=out)
             if not m.ok:
-                failures.append(f"{sc.name}/{name}: value check failed")
+                failures.append(f"{sc.name}/{spec}: value check failed")
             if not m.motion_ok:
                 failures.append(
-                    f"{sc.name}/{name}: motion ({m.h2d_bytes}, {m.h2d_calls})"
+                    f"{sc.name}/{spec}: motion ({m.h2d_bytes}, {m.h2d_calls})"
                     f" != expected {m.expected.as_tuple()}")
-        if sc.steady_expected is not None:
-            # steady-state delta contract: every warm pass ships exactly
-            # the dirty bucket (ledger equality), skips everything else,
-            # and still round-trips the mutated tree.
-            for i, m in enumerate(run_steady_scenario(sc, passes=2)):
-                rows.append(dict(scenario=sc.name,
-                                 scheme=f"marshal_delta/steady{i}",
+        if not _steady_capable(sc):
+            continue
+        # steady-state delta contract: every warm pass ships exactly the
+        # mutated region — whole dirty buckets, or under a sharded spec
+        # only the dirty (bucket, device) shards — skips everything else
+        # with exact per-device complements, and still round-trips the
+        # mutated tree.
+        steady_specs = [r for r in requested if r.delta] if requested \
+            else [sc.steady_spec or TransferSpec.parse("marshal+delta")]
+        for sspec in steady_specs:
+            for i, m in enumerate(run_steady_scenario(sc, passes=2,
+                                                      spec=sspec)):
+                rows.append(dict(scenario=sc.name, spec=str(sspec),
+                                 scheme=f"{sspec.name}/steady{i}",
                                  wall_us=round(m.wall_us, 1),
                                  h2d_bytes=m.h2d_bytes,
                                  h2d_calls=m.h2d_calls,
                                  ok=m.ok, motion_ok=m.motion_ok))
-                print(f"{sc.name},marshal_delta/steady{i},{m.wall_us:.1f},"
+                print(f"{sc.name},{sspec}/steady{i},{m.wall_us:.1f},"
                       f"{m.h2d_bytes},{m.h2d_calls},"
                       f"{'ok' if m.ok else 'FAIL'},"
                       f"{'ok' if m.motion_ok else 'FAIL'}", file=out)
                 if not m.ok:
-                    failures.append(f"{sc.name}/steady{i}: value check failed")
+                    failures.append(
+                        f"{sc.name}/{sspec}/steady{i}: value check failed")
                 if not m.motion_ok:
                     failures.append(
-                        f"{sc.name}/steady{i}: steady motion ({m.h2d_bytes}, "
-                        f"{m.h2d_calls}, skipped {m.skipped_bytes}) != "
-                        f"expected {sc.steady_expected.as_tuple()}")
+                        f"{sc.name}/{sspec}/steady{i}: steady motion "
+                        f"({m.h2d_bytes}, {m.h2d_calls}, skipped "
+                        f"{m.skipped_bytes}, by device {m.h2d_by_device}) "
+                        f"broke the ledger contract")
     print(f"[smoke] {len(rows)} cells in {time.time() - t0:.1f}s", file=out)
     if failures:
         raise SystemExit("[smoke] FAILURES:\n  " + "\n  ".join(failures))

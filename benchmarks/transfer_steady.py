@@ -3,17 +3,20 @@
 The arena engine's claim is that the transfer *plan* is reusable metadata:
 the first ``to_device`` for a tree shape pays plan + staging-alloc + compile,
 every later call is pure data motion — and, since the incremental engine,
-``marshal_delta`` rows show the next step: a repeat transfer whose staging
+``marshal+delta`` rows show the next step: a repeat transfer whose staging
 versions have not moved ships NOTHING (``skipped_bytes`` + retained device
-buckets), and ``steady_reuse`` scenarios additionally report the per-pass
-cost when exactly one dtype bucket is dirty.  Sharded scenarios run every
-scheme against the whole host mesh and record the per-device split.
+buckets), and steady scenarios additionally report the per-pass cost when
+exactly one dtype bucket (or, under ``marshal+delta@dp{k}``, only the
+bucket *shards* a mutation overlaps) is dirty.  Sharded scenarios run
+every spec against the whole host mesh and record the per-device split.
 
 This section measures all of it over the ENTIRE ``repro.scenarios``
-registry — one row per applicable scheme x registered scenario — and (via
-``benchmarks.run``) persists the rows to ``BENCH_transfer.json`` in the
-schema-versioned format of ``benchmarks.bench_schema`` so the perf
-trajectory stays machine-comparable across PRs.
+registry — one row per applicable :class:`TransferSpec` x registered
+scenario — and (via ``benchmarks.run``) persists the rows to
+``BENCH_transfer.json`` in the schema-versioned format of
+``benchmarks.bench_schema`` (v3: rows carry the canonical ``spec`` string
+and the per-device ledger maps) so the perf trajectory stays
+machine-comparable across PRs.
 
 Every row's first-pass ``h2d_bytes``/``h2d_calls`` (and per-device split,
 when sharded) is asserted against the scenario's analytic expectation
@@ -25,16 +28,17 @@ from __future__ import annotations
 import json
 import sys
 import time
-from typing import Any, List, Optional
+from typing import Any, List, Optional, Sequence
 
 import jax
 
+from repro.core import TransferLedger
 from repro.scenarios import (Scenario, iter_scenarios, motion_matches,
                              run_steady_scenario)
 
-from .bench_schema import SCHEMA_VERSION, upgrade_row
+from .bench_schema import LEDGER_COLUMNS, SCHEMA_VERSION, upgrade_row
 
-_COLS = ("scenario,scheme,first_wall_us,cached_wall_us,speedup,h2d_bytes,"
+_COLS = ("scenario,spec,first_wall_us,cached_wall_us,speedup,h2d_bytes,"
          "h2d_calls,enqueue_us,sync_us,skipped_bytes,steady_wall_us")
 
 
@@ -53,68 +57,90 @@ def _one_transfer(scheme, sc: Scenario, tree: Any) -> float:
     return time.perf_counter() - t0
 
 
-def _steady_columns(sc: Scenario) -> dict:
-    """steady_reuse x delta: per-pass wall/bytes with ONE dirty bucket."""
-    ms = run_steady_scenario(sc, passes=3)
+def _steady_columns(sc: Scenario, spec) -> dict:
+    """steady x delta: per-pass wall/bytes with only the mutated region
+    dirty, under THE ROW'S spec (so a sharded delta row's steady columns
+    describe the sharded steady state, not the scenario's default)."""
+    ms = run_steady_scenario(sc, passes=3, spec=spec)
     assert all(m.ok and m.motion_ok for m in ms), \
         f"{sc.name}: steady delta pass broke its ledger contract: {ms}"
     best = min(ms, key=lambda m: m.wall_us)
     return dict(steady_wall_us=round(best.wall_us, 1),
-                steady_h2d_bytes=best.h2d_bytes)
+                steady_h2d_bytes=best.h2d_bytes,
+                steady_skipped_bytes=best.skipped_bytes)
+
+
+def _spec_requested(spec, requested: Optional[Sequence[str]]) -> bool:
+    return requested is None or str(spec) in requested \
+        or spec.name in requested
 
 
 def run(out=sys.stdout, repeats: int = 5, quick: bool = False,
-        json_path: Optional[str] = None, size: Optional[str] = None) -> List[dict]:
+        json_path: Optional[str] = None, size: Optional[str] = None,
+        specs: Optional[Sequence[str]] = None) -> List[dict]:
+    """``specs`` (canonical spec strings or legacy scheme names) restricts
+    the sweep to matching rows — the ``--spec`` CLI axis."""
     size = size or ("quick" if quick else "full")
     rows: List[dict] = []
+    suite = TransferLedger()      # every first pass, merged: the suite total
     print(_COLS, file=out)
     for sc in iter_scenarios(size):
         tree = sc.build()
-        for name in sc.scheme_names():
-            scheme = sc.make_scheme(name)
+        for spec in sc.specs():
+            if not _spec_requested(spec, specs):
+                continue
+            scheme = sc.scheme_for(spec)
             first_us = _one_transfer(scheme, sc, tree) * 1e6
-            h2d_bytes, h2d_calls = (scheme.ledger.h2d_bytes,
-                                    scheme.ledger.h2d_calls)
+            first = scheme.ledger.as_dict()
+            suite.merge(scheme.ledger)
             expected = sc.expected_motion(
-                name, tree, align_elems=getattr(scheme, "align_elems", 1))
+                spec, tree, align_elems=getattr(scheme, "align_elems", 1))
             assert motion_matches(scheme.ledger, expected, sc.num_shards), (
-                f"{sc.name}/{name}: ledger ({h2d_bytes}, {h2d_calls}, "
-                f"{scheme.ledger.per_device()}) != analytic expectation "
-                f"{expected}")
-            cached, enq, syn, skip, dcalls = [], [], [], [], []
+                f"{sc.name}/{spec}: ledger ({first['h2d_bytes']}, "
+                f"{first['h2d_calls']}, {scheme.ledger.per_device()}) != "
+                f"analytic expectation {expected}")
+            cached, passes = [], []
             for _ in range(repeats):
-                if name == "uvm":
+                if spec.kind == "uvm":
                     # demand paging has no persistent plan: every pass
                     # re-faults, so "cached" only measures batching gains
-                    scheme = sc.make_scheme(name)
+                    scheme = sc.scheme_for(spec)
                 scheme.ledger.reset()
                 cached.append(_one_transfer(scheme, sc, tree) * 1e6)
-                enq.append(scheme.ledger.enqueue_s * 1e6)
-                syn.append(scheme.ledger.sync_s * 1e6)
-                skip.append(scheme.ledger.skipped_bytes)
-                dcalls.append(scheme.ledger.delta_calls)
+                passes.append(scheme.ledger.as_dict())
             cached_us = min(cached)
-            i = cached.index(cached_us)
+            best = passes[cached.index(cached_us)]
             row = dict(schema=SCHEMA_VERSION,
-                       scenario=sc.name, family=sc.family, scheme=name,
+                       scenario=sc.name, family=sc.family, scheme=spec.name,
+                       spec=str(spec),
                        first_wall_us=round(first_us, 1),
                        cached_wall_us=round(cached_us, 1),
                        speedup=round(first_us / cached_us, 2),
-                       h2d_bytes=h2d_bytes, h2d_calls=h2d_calls,
-                       enqueue_us=round(enq[i], 1), sync_us=round(syn[i], 1),
-                       skipped_bytes=skip[i], delta_calls=dcalls[i],
+                       enqueue_us=round(best["enqueue_s"] * 1e6, 1),
+                       sync_us=round(best["sync_s"] * 1e6, 1),
                        sharded=sc.sharding is not None,
                        n_devices=sc.num_shards,
                        per_device_bytes=expected.per_device_bytes,
                        per_device_calls=expected.per_device_calls)
-            if name == "marshal_delta" and sc.steady_expected is not None:
-                row.update(_steady_columns(sc))
+            # ledger columns come straight from the first-pass dict (the
+            # cold motion is the row's analytic identity), except the
+            # delta-skip counters, which only the cached passes exercise
+            row.update({k: first[k] for k in LEDGER_COLUMNS})
+            for k in ("skipped_bytes", "delta_calls",
+                      "skipped_bytes_by_device"):
+                row[k] = best[k]
+            if spec.delta and (sc.steady_expected is not None
+                               or "mutate_paths" in sc.params
+                               or "mutate_path" in sc.params):
+                row.update(_steady_columns(sc, spec))
             row = upgrade_row(row)
             rows.append(row)
             csv = {k: ("" if v is None else v) for k, v in row.items()}
-            print("{scenario},{scheme},{first_wall_us},{cached_wall_us},"
+            print("{scenario},{spec},{first_wall_us},{cached_wall_us},"
                   "{speedup},{h2d_bytes},{h2d_calls},{enqueue_us},{sync_us},"
                   "{skipped_bytes},{steady_wall_us}".format(**csv), file=out)
+    print(f"[transfer_steady] suite cold motion: {suite.h2d_bytes} bytes "
+          f"in {suite.h2d_calls} DMAs across {len(rows)} rows", file=out)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rows, f, indent=2)

@@ -1,15 +1,30 @@
 """Deep-copy scenarios demo: the paper's experiments, interactively sized.
 
     PYTHONPATH=src python examples/deepcopy_demo.py [--k 8 --n 100000]
+    PYTHONPATH=src python examples/deepcopy_demo.py --spec marshal+delta
 
-Runs one Linear-scenario cell and one Dense-scenario cell under all three
-transfer schemes, printing Algorithm-2 wall time, kernel time and the exact
-data motion each scheme issued — the paper's Figures 5-7 at one data point.
+Runs one Linear-scenario cell and one Dense-scenario cell under the
+paper's three transfer specs (plus any ``--spec`` strings you add, e.g.
+``marshal+delta`` or ``marshal+delta@dp8`` on a multi-device host),
+printing Algorithm-2 wall time, kernel time and the exact data motion
+each spec issued — the paper's Figures 5-7 at one data point.
 """
 import argparse
 
+from repro.core import PAPER_SPECS, TransferSpec
 from repro.scenarios import (dense_chain, dense_tree, dense_uvm_access_set,
                              linear_tree, linear_used_paths, run_algorithm2)
+
+
+def _report(tree, used, specs, access=None):
+    base = None
+    for spec in specs:
+        m = run_algorithm2(tree, used, spec, uvm_access=access)
+        base = base or m.wall_us
+        print(f"  {str(spec):18s} wall {m.wall_us/1e3:8.2f} ms "
+              f"(x{m.wall_us/base:5.2f} vs uvm)  kernel {m.kernel_us:7.1f} us"
+              f"  H2D {m.h2d_calls:3d} DMAs / {m.h2d_bytes/1e6:8.3f} MB"
+              f"  check={'ok' if m.ok else 'FAIL'}")
 
 
 def main():
@@ -17,32 +32,22 @@ def main():
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--n", type=int, default=100_000)
     ap.add_argument("--q", type=int, default=6)
+    ap.add_argument("--spec", action="append", default=[],
+                    help="extra TransferSpec strings to run alongside the "
+                         "paper's three (repeatable)")
     args = ap.parse_args()
+    specs = list(PAPER_SPECS) + [TransferSpec.parse(s) for s in args.spec]
 
     print(f"=== Linear scenario: k={args.k}, n={args.n}, LLinit-LLused ===")
     tree = linear_tree(args.k, args.n, "LLinit-LLused")
     used = linear_used_paths(args.k, "LLinit-LLused")
-    base = None
-    for scheme in ("uvm", "marshal", "pointerchain"):
-        m = run_algorithm2(tree, used, scheme)
-        base = base or m.wall_us
-        print(f"  {scheme:13s} wall {m.wall_us/1e3:8.2f} ms "
-              f"(x{m.wall_us/base:5.2f} vs uvm)  kernel {m.kernel_us:7.1f} us"
-              f"  H2D {m.h2d_calls:3d} DMAs / {m.h2d_bytes/1e6:8.3f} MB"
-              f"  check={'ok' if m.ok else 'FAIL'}")
+    _report(tree, used, specs)
 
     print(f"\n=== Dense scenario: q={args.q}, n={args.n // 10}, depth 3 ===")
     tree = dense_tree(args.q, args.n // 10)
     used = [dense_chain(args.q)]
     access = dense_uvm_access_set(args.q)
-    base = None
-    for scheme in ("uvm", "marshal", "pointerchain"):
-        m = run_algorithm2(tree, used, scheme, uvm_access=access)
-        base = base or m.wall_us
-        print(f"  {scheme:13s} wall {m.wall_us/1e3:8.2f} ms "
-              f"(x{m.wall_us/base:5.2f} vs uvm)  kernel {m.kernel_us:7.1f} us"
-              f"  H2D {m.h2d_calls:3d} DMAs / {m.h2d_bytes/1e6:8.3f} MB"
-              f"  check={'ok' if m.ok else 'FAIL'}")
+    _report(tree, used, specs, access=access)
     print("\n(marshalling moves the whole q^3 tree for one used leaf; "
           "pointerchain moves exactly that leaf — the paper's Fig. 7 gap)")
 

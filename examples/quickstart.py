@@ -9,9 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (MarshalScheme, PointerChainScheme, UVMScheme,
-                        chain_call, declare, extract, pack, region, unpack,
-                        tree_bytes)
+from repro.core import (chain_call, declare, extract, pack, region,
+                        transfer_scheme, tree_bytes, unpack)
 
 
 def main():
@@ -43,9 +42,9 @@ def main():
     simulation = chain_call(lambda p: p * 2.0, simulation,
                             ["atoms.traits.positions"], jit=True)
 
-    # -- the three transfer schemes, with their data motion -----------------
-    for name, scheme in (("uvm", UVMScheme()), ("marshal", MarshalScheme()),
-                         ("pointerchain", PointerChainScheme())):
+    # -- the three transfer specs, with their data motion -------------------
+    for name in ("uvm", "marshal", "pointerchain"):
+        scheme = transfer_scheme(name)
         if name == "pointerchain":
             dev = scheme.to_device(simulation, paths=["atoms.traits.positions"])
         elif name == "uvm":

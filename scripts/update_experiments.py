@@ -55,12 +55,13 @@ def transfer_main(json_path: str, old_path: str = None) -> None:
     from benchmarks import bench_schema
 
     rows = bench_schema.load_rows(json_path)
-    lines = ["| scenario | scheme | cached µs | h2d bytes | calls | "
+    lines = ["| scenario | spec | cached µs | h2d bytes | calls | "
              "skipped | devices | steady µs |",
              "|---|---|---|---|---|---|---|---|"]
     for r in rows:
         lines.append(
-            f"| {r['scenario']} | {r['scheme']} | {r['cached_wall_us']} | "
+            f"| {r['scenario']} | {r['spec'] or r['scheme']} | "
+            f"{r['cached_wall_us']} | "
             f"{r['h2d_bytes']} | {r['h2d_calls']} | {r['skipped_bytes']} | "
             f"{r['n_devices']} | {r['steady_wall_us'] or ''} |")
     body = (f"### Steady-state transfers (schema "

@@ -9,11 +9,14 @@ from .chainref import (ChainRef, ShardSlice, declare, extract, insert, region,
                        chain_call, chain_jit, resolve_shards)
 from .arena import (ArenaLayout, LeafSlot, plan, pack, unpack, repack_into,
                     shard_ranges, datasize_linear, datasize_dense)
-from .engine import (ArenaEntry, cached_plan, get_entry, pack_traced,
-                     unpack_traced, repack_traced, cache_stats, clear_cache,
+from .engine import (ArenaEntry, DeltaState, TransferSession, cached_plan,
+                     get_entry, get_session, pack_traced, unpack_traced,
+                     repack_traced, cache_stats, clear_cache,
                      set_cache_limits, num_shards_of)
+from .spec import PAPER_SPECS, TransferSpec, UnsupportedSpecError
 from .schemes import (TransferLedger, TransferScheme, UVMScheme, MarshalScheme,
-                      PointerChainScheme, SCHEMES, make_scheme)
+                      PointerChainScheme, SCHEMES, make_scheme,
+                      transfer_scheme)
 from .deepcopy import (full_deepcopy, selective_deepcopy, host_skeleton,
                        tree_bytes)
 
@@ -23,10 +26,12 @@ __all__ = [
     "chain_call", "chain_jit", "resolve_shards",
     "ArenaLayout", "LeafSlot", "plan", "pack", "unpack", "repack_into",
     "shard_ranges", "datasize_linear", "datasize_dense",
-    "ArenaEntry", "cached_plan", "get_entry", "pack_traced", "unpack_traced",
+    "ArenaEntry", "DeltaState", "TransferSession", "cached_plan", "get_entry",
+    "get_session", "pack_traced", "unpack_traced",
     "repack_traced", "cache_stats", "clear_cache", "set_cache_limits",
     "num_shards_of",
+    "PAPER_SPECS", "TransferSpec", "UnsupportedSpecError",
     "TransferLedger", "TransferScheme", "UVMScheme", "MarshalScheme",
-    "PointerChainScheme", "SCHEMES", "make_scheme",
+    "PointerChainScheme", "SCHEMES", "make_scheme", "transfer_scheme",
     "full_deepcopy", "selective_deepcopy", "host_skeleton", "tree_bytes",
 ]

@@ -1,4 +1,4 @@
-"""Arena transfer engine — persistent layouts, versioned staging, fences.
+"""Arena transfer engine — sessions, persistent layouts, versioned staging.
 
 The paper's Algorithm 1 separates *planning* (determineTotalBytes + the
 requestList) from *data motion* (serve allocations, one batched DMA).  The
@@ -6,10 +6,17 @@ seed code re-ran the plan and re-packed with ``np.concatenate`` on every
 ``to_device``; this module makes the plan a reusable, cached artifact
 (LLAMA's layout-as-metadata, arXiv 2106.04284) and makes the *staging
 contents* a versioned artifact too, so steady-state repeat transfers can
-skip buckets whose bytes have not changed (delta transfers):
+skip buckets — and, per-device, individual bucket *shards* — whose bytes
+have not changed (delta transfers):
 
-  * :func:`cached_plan`   — LRU-bounded ``ArenaLayout`` cache keyed by
-                            (treedef, leaf signature, alignment, shards).
+  * :class:`TransferSession` — owns everything that outlives one scheme
+    executor: the LRU-bounded ``ArenaLayout``/``ArenaEntry`` caches keyed
+    by (treedef, leaf signature, alignment, shards), the
+    :class:`DeltaState` registry (retained device buckets), and the
+    ledgers it has issued.  Schemes built by
+    ``TransferScheme.from_spec(spec, session)`` are thin executors over a
+    session; the module-level functions below delegate to the default
+    session, so existing call sites keep working.
   * :class:`ArenaEntry`   — per-layout persistent state:
       - TWO host staging buffers per dtype bucket (double buffering): a
         rewrite rotates to the other buffer and waits only that buffer's
@@ -20,6 +27,10 @@ skip buckets whose bytes have not changed (delta transfers):
         skips the memcmp when the identical leaf *object* was packed last
         time — callers that mutate leaves in place must then call
         :meth:`ArenaEntry.mark_dirty` / :meth:`ArenaEntry.bump_version`);
+      - per-(bucket, shard) version counters (``shard_versions``) for
+        sharded layouts: a changed slot bumps exactly the shards whose
+        element ranges it overlaps, so a per-device delta transfer
+        re-ships only the shards whose bytes moved;
       - jit-compiled fused unpack / device-pack / repack.
   * :func:`pack_traced` / :func:`unpack_traced` — the same fused transforms
                             as free functions, safe to call under an outer
@@ -32,12 +43,17 @@ may be read by device values long after the put returns.  Every consumer
 must either synchronize before staging is rewritten (the blocking
 ``MarshalScheme`` path) or register the consuming arrays as a **fence** on
 the buffer (:meth:`ArenaEntry.add_fence`); ``pack_host`` waits a buffer's
-fence before rewriting it.  See DESIGN.md §4/§7.
+fence before rewriting it.  Retained per-shard device arrays additionally
+rely on range disjointness: a shard's byte range in a staging buffer is
+rewritten only when a slot overlapping it changed, which bumps that
+shard's version — and a bumped shard is re-shipped (its retained array
+replaced) before any gather of the same call.  See DESIGN.md §4/§7/§8.
 """
 from __future__ import annotations
 
 import collections
 import time
+import weakref
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -49,37 +65,25 @@ from .arena import ArenaLayout
 
 Buffers = arena_lib.Buffers
 
-# LRU caches keyed by (treedef, leaf signature, align_elems, num_shards).
-# Layouts are tiny but long-running serve/train loops can still visit an
-# unbounded stream of shapes; entries additionally pin full-size host
-# staging buffers plus three compiled executables.  Both are bounded.
-_LAYOUT_CACHE: "collections.OrderedDict[Tuple[Any, Tuple, int, int], ArenaLayout]" \
-    = collections.OrderedDict()
-_ENTRY_CACHE: "collections.OrderedDict[Tuple[Any, Tuple, int, int], ArenaEntry]" \
-    = collections.OrderedDict()
+# default cache caps for new sessions: layouts are tiny but long-running
+# serve/train loops can still visit an unbounded stream of shapes; entries
+# additionally pin full-size host staging buffers plus three compiled
+# executables.  Both are bounded per session.
 LAYOUT_CACHE_MAX = 512
 ENTRY_CACHE_MAX = 64
-_STATS = {"hits": 0, "misses": 0, "layout_evictions": 0, "entry_evictions": 0}
 
 
-def set_cache_limits(layout_max: Optional[int] = None,
-                     entry_max: Optional[int] = None) -> None:
-    """Configure the cache caps (e.g. per deployment memory budget)."""
-    global LAYOUT_CACHE_MAX, ENTRY_CACHE_MAX
-    if layout_max is not None:
-        LAYOUT_CACHE_MAX = int(layout_max)
-    if entry_max is not None:
-        ENTRY_CACHE_MAX = int(entry_max)
-    _trim_caches()
+def num_shards_of(sharding: Any) -> int:
+    """Shard count of a sharding target: an int, a NamedSharding (mesh
+    size), or None (1).  One derivation for the whole tree — this is the
+    spec layer's rule (``spec._shard_count``), re-exposed with the
+    engine's TypeError contract."""
+    from .spec import UnsupportedSpecError, _shard_count
 
-
-def _trim_caches() -> None:
-    while len(_LAYOUT_CACHE) > LAYOUT_CACHE_MAX:
-        _LAYOUT_CACHE.popitem(last=False)
-        _STATS["layout_evictions"] += 1
-    while len(_ENTRY_CACHE) > ENTRY_CACHE_MAX:
-        _ENTRY_CACHE.popitem(last=False)
-        _STATS["entry_evictions"] += 1
+    try:
+        return _shard_count(sharding)
+    except UnsupportedSpecError as e:
+        raise TypeError(str(e)) from None
 
 
 def _leaf_signature(leaves) -> Tuple:
@@ -93,65 +97,217 @@ def _leaf_signature(leaves) -> Tuple:
     return tuple(sig)
 
 
-def num_shards_of(sharding: Any) -> int:
-    """Shard count of a sharding target: an int, a NamedSharding (mesh
-    size), or None (1)."""
-    if sharding is None:
-        return 1
-    if isinstance(sharding, int):
-        return int(sharding)
-    mesh = getattr(sharding, "mesh", None)
-    if mesh is not None:
-        return int(np.prod(mesh.devices.shape))
-    raise TypeError(f"cannot derive a shard count from {sharding!r}")
-
-
 def _layout_key(tree: Any, align_elems: int,
                 num_shards: int = 1) -> Tuple[Any, Tuple, int, int]:
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return (treedef, _leaf_signature(leaves), align_elems, num_shards)
 
 
-def _plan_for_key(key: Tuple[Any, Tuple, int, int], tree: Any,
-                  align_elems: int, num_shards: int = 1) -> ArenaLayout:
-    layout = _LAYOUT_CACHE.get(key)
-    if layout is None:
-        _STATS["misses"] += 1
-        layout = arena_lib.plan(tree, align_elems, shard_multiple=num_shards)
-        _LAYOUT_CACHE[key] = layout
-        _trim_caches()
-    else:
-        _STATS["hits"] += 1
-        _LAYOUT_CACHE.move_to_end(key)
-    return layout
+class DeltaState:
+    """What a delta executor has already SHIPPED: per entry, the retained
+    device buffer (or per-shard buffers) of every bucket, keyed by shipped
+    version, plus the memoized fully-clean unpack.  Owned by a
+    :class:`TransferSession` so its device memory has a lifecycle
+    (``session.clear()`` drops it); held per executor by default, shared
+    across executors of one spec via ``session.delta_state(spec)``."""
 
+    def __init__(self):
+        # entry -> {bucket: (shipped version, retained device buffer)}, or
+        # for sharded layouts {bucket: [(version, buffer)] per shard}
+        self.retained: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+        # entry -> (versions snapshot, unpacked device tree): a repeat pass
+        # with ZERO dirty buckets/shards returns the memoized (immutable)
+        # tree — no DMA, no gather dispatch, pure fingerprint walk.
+        self.last_unpack: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+    def clear(self) -> None:
+        self.retained.clear()
+        self.last_unpack.clear()
+
+
+class TransferSession:
+    """Owns every artifact that outlives one transfer call: cached layouts
+    and entries (LRU-bounded), the delta states holding retained device
+    buckets, and the ledgers issued to schemes.  The module-level default
+    session (:func:`get_session`) is what the delegating free functions and
+    spec-less scheme construction use; an isolated session gives a workload
+    its own caches and retained-state lifecycle."""
+
+    def __init__(self, layout_max: int = None, entry_max: int = None):
+        self.layout_max = LAYOUT_CACHE_MAX if layout_max is None else int(layout_max)
+        self.entry_max = ENTRY_CACHE_MAX if entry_max is None else int(entry_max)
+        self._layouts: "collections.OrderedDict[Tuple, ArenaLayout]" = \
+            collections.OrderedDict()
+        self._entries: "collections.OrderedDict[Tuple, ArenaEntry]" = \
+            collections.OrderedDict()
+        self._stats = {"hits": 0, "misses": 0,
+                       "layout_evictions": 0, "entry_evictions": 0}
+        # spec -> shared DeltaState; plus every private state ever issued
+        # (weak: dropped with its executor), so clear() can release all
+        # retained device memory this session caused to be held.
+        self._spec_states: Dict[Any, DeltaState] = {}
+        self._delta_states: "weakref.WeakSet[DeltaState]" = weakref.WeakSet()
+        self._ledgers: List["weakref.ref"] = []
+
+    # -- plans & entries -----------------------------------------------------
+    def cached_plan(self, tree: Any, align_elems: int = 1,
+                    sharding: Any = None) -> ArenaLayout:
+        """``arena.plan`` behind the persistent layout cache.
+
+        Works on concrete trees AND on tracer trees (inside jit/shard_map):
+        the key only reads shapes/dtypes, never values.  ``sharding`` (an
+        int shard count or a NamedSharding) pads every bucket to a
+        per-device multiple and becomes part of the cache key.
+        """
+        k = num_shards_of(sharding)
+        return self._plan_for_key(_layout_key(tree, align_elems, k), tree,
+                                  align_elems, k)
+
+    def plan(self, tree: Any, spec: Any) -> ArenaLayout:
+        """`cached_plan` keyed by a :class:`~repro.core.spec.TransferSpec`:
+        the spec's align/sharding axes ARE the plan parameters."""
+        return self.cached_plan(tree, spec.align_elems, spec.sharding)
+
+    def _plan_for_key(self, key: Tuple, tree: Any, align_elems: int,
+                      num_shards: int) -> ArenaLayout:
+        layout = self._layouts.get(key)
+        if layout is None:
+            self._stats["misses"] += 1
+            layout = arena_lib.plan(tree, align_elems,
+                                    shard_multiple=num_shards)
+            self._layouts[key] = layout
+            self._trim()
+        else:
+            self._stats["hits"] += 1
+            self._layouts.move_to_end(key)
+        return layout
+
+    def get_entry(self, tree: Any, align_elems: int = 1,
+                  sharding: Any = None) -> "ArenaEntry":
+        """The engine's front door: cached ``ArenaEntry`` for this tree's
+        shape.  LRU-bounded at ``entry_max``: evicted entries stay usable
+        for any scheme still holding them, they just stop being shared."""
+        k = num_shards_of(sharding)
+        key = _layout_key(tree, align_elems, k)
+        entry = self._entries.get(key)
+        if entry is None:
+            entry = ArenaEntry(self._plan_for_key(key, tree, align_elems, k))
+            self._entries[key] = entry
+            self._trim()
+        else:
+            self._stats["hits"] += 1
+            self._entries.move_to_end(key)
+        return entry
+
+    def entry_for(self, tree: Any, spec: Any) -> "ArenaEntry":
+        return self.get_entry(tree, spec.align_elems, spec.sharding)
+
+    def _trim(self) -> None:
+        while len(self._layouts) > self.layout_max:
+            self._layouts.popitem(last=False)
+            self._stats["layout_evictions"] += 1
+        while len(self._entries) > self.entry_max:
+            self._entries.popitem(last=False)
+            self._stats["entry_evictions"] += 1
+
+    def set_cache_limits(self, layout_max: Optional[int] = None,
+                         entry_max: Optional[int] = None) -> None:
+        """Configure the cache caps (e.g. per deployment memory budget)."""
+        if layout_max is not None:
+            self.layout_max = int(layout_max)
+        if entry_max is not None:
+            self.entry_max = int(entry_max)
+        self._trim()
+
+    def cache_stats(self) -> Dict[str, int]:
+        out = dict(self._stats)
+        out["layout_size"] = len(self._layouts)
+        out["entry_size"] = len(self._entries)
+        return out
+
+    # -- delta state ---------------------------------------------------------
+    def delta_state(self, spec: Any = None) -> DeltaState:
+        """Retained-device-state container for a delta executor.  With a
+        ``spec`` key the state is SHARED by every executor of that spec in
+        this session (the session owns one steady state per policy);
+        without one the caller gets a private state (a fresh executor's
+        first pass is always a full cold transfer) whose lifecycle the
+        session still tracks."""
+        if spec is not None:
+            state = self._spec_states.get(spec)
+            if state is None:
+                state = self._spec_states[spec] = DeltaState()
+                self._delta_states.add(state)
+            return state
+        state = DeltaState()
+        self._delta_states.add(state)
+        return state
+
+    # -- ledgers -------------------------------------------------------------
+    def make_ledger(self):
+        """A fresh ledger whose lifecycle the session tracks (merge all
+        live ones with :meth:`merged_ledger`)."""
+        from .schemes import TransferLedger
+
+        ledger = TransferLedger()
+        self._ledgers.append(weakref.ref(ledger))
+        self._ledgers = [r for r in self._ledgers if r() is not None]
+        return ledger
+
+    def merged_ledger(self):
+        """One ledger summing every live ledger this session issued — the
+        session-wide data-motion picture."""
+        from .schemes import TransferLedger
+
+        out = TransferLedger()
+        out.merge(*[led for r in self._ledgers
+                    if (led := r()) is not None])
+        return out
+
+    # -- lifecycle -----------------------------------------------------------
+    def clear(self) -> None:
+        """Drop cached layouts/entries, every retained device bucket, and
+        the stats counters.  Live schemes keep working (cold)."""
+        self._layouts.clear()
+        self._entries.clear()
+        self._spec_states.clear()
+        for state in list(self._delta_states):
+            state.clear()
+        for k in self._stats:
+            self._stats[k] = 0
+
+
+_DEFAULT_SESSION = TransferSession()
+
+
+def get_session() -> TransferSession:
+    """The process-default session (what spec-less construction uses)."""
+    return _DEFAULT_SESSION
+
+
+# -- module-level delegates (the pre-session API; unchanged signatures) ------
 
 def cached_plan(tree: Any, align_elems: int = 1,
                 sharding: Any = None) -> ArenaLayout:
-    """``arena.plan`` behind the persistent layout cache.
+    return _DEFAULT_SESSION.cached_plan(tree, align_elems, sharding)
 
-    Works on concrete trees AND on tracer trees (inside jit/shard_map): the
-    key only reads shapes/dtypes, never values.  ``sharding`` (an int shard
-    count or a NamedSharding) pads every bucket to a per-device multiple
-    and becomes part of the cache key.
-    """
-    k = num_shards_of(sharding)
-    return _plan_for_key(_layout_key(tree, align_elems, k), tree,
-                         align_elems, k)
+
+def get_entry(tree: Any, align_elems: int = 1,
+              sharding: Any = None) -> "ArenaEntry":
+    return _DEFAULT_SESSION.get_entry(tree, align_elems, sharding)
+
+
+def set_cache_limits(layout_max: Optional[int] = None,
+                     entry_max: Optional[int] = None) -> None:
+    _DEFAULT_SESSION.set_cache_limits(layout_max, entry_max)
 
 
 def cache_stats() -> Dict[str, int]:
-    out = dict(_STATS)
-    out["layout_size"] = len(_LAYOUT_CACHE)
-    out["entry_size"] = len(_ENTRY_CACHE)
-    return out
+    return _DEFAULT_SESSION.cache_stats()
 
 
 def clear_cache() -> None:
-    _LAYOUT_CACHE.clear()
-    _ENTRY_CACHE.clear()
-    for k in _STATS:
-        _STATS[k] = 0
+    _DEFAULT_SESSION.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -215,8 +371,9 @@ FENCE_DEPTH = 8
 class ArenaEntry:
     """Everything reusable about one (treedef, signature, alignment, shards)
     point: the layout, double-buffered host staging per bucket with content
-    version counters and per-buffer fences, and the compiled fused
-    transforms.  Created once, then every call is pure data motion."""
+    version counters (bucket- and shard-granular) and per-buffer fences,
+    and the compiled fused transforms.  Created once, then every call is
+    pure data motion."""
 
     def __init__(self, layout: ArenaLayout):
         self.layout = layout
@@ -233,6 +390,12 @@ class ArenaEntry:
         # staging content versions: versions[b] bumps exactly when bucket
         # b's staged bytes change (or bump_version forces it) — monotone.
         self.versions: Dict[str, int] = {b: 0 for b in self._bufs}
+        # per-(bucket, shard) versions for sharded layouts: shard s of
+        # bucket b bumps exactly when a changed slot overlaps its element
+        # range — the per-device half of the dirty tracking.
+        k = max(1, layout.shard_multiple)
+        self.shard_versions: Dict[str, List[int]] = {
+            b: [0] * k for b in self._bufs}
         self._slot_vers: List[int] = [0] * layout.num_leaves
         self._bucket_slots: Dict[str, List[int]] = {b: [] for b in self._bufs}
         for i, slot in enumerate(layout.slots):
@@ -285,11 +448,30 @@ class ArenaEntry:
         self._recheck.update(buckets or self._bufs)
 
     def bump_version(self, *buckets: str) -> None:
-        """Unconditionally advance bucket versions (all if none given),
-        forcing the next delta transfer to re-ship them even if the staged
-        bytes are unchanged."""
+        """Unconditionally advance bucket (and shard) versions (all buckets
+        if none given), forcing the next delta transfer to re-ship them
+        even if the staged bytes are unchanged."""
         for b in (buckets or list(self._bufs)):
             self.versions[b] += 1
+            self.shard_versions[b] = [v + 1 for v in self.shard_versions[b]]
+
+    def _bump_shards(self, bucket: str, pending_slots: Sequence[int]) -> None:
+        """Bump the shard versions a set of changed slots overlaps."""
+        shards = self.shard_versions[bucket]
+        k = len(shards)
+        if k == 1:
+            shards[0] += 1
+            return
+        n = self.layout.bucket_sizes[bucket]
+        step = n // k
+        touched = set()
+        for i in pending_slots:
+            slot = self.layout.slots[i]
+            lo = slot.offset // step
+            hi = (slot.offset + slot.size - 1) // step
+            touched.update(range(lo, min(hi, k - 1) + 1))
+        for s in touched:
+            shards[s] += 1
 
     # -- fences --------------------------------------------------------------
     def add_fence(self, bucket: str, values: Sequence[Any]) -> None:
@@ -319,7 +501,8 @@ class ArenaEntry:
         (memcmp); with ``trust_identity`` also skip the memcmp when the
         identical leaf object was packed last time (in-place mutators must
         ``mark_dirty``).  Buckets that change rotate to their spare buffer
-        (waiting only that buffer's fence) and bump their version.
+        (waiting only that buffer's fence) and bump their version; the
+        shards a changed slot overlaps bump their shard versions.
         """
         leaves = jax.tree_util.tree_leaves(tree)
         if len(leaves) != self.layout.num_leaves:
@@ -368,6 +551,8 @@ class ArenaEntry:
                     held[lj] = self._slot_vers[si]
             self._active[b] = tgt
             self.versions[b] += 1
+            self._bump_shards(b, [i for i in pending
+                                  if self.layout.slots[i].bucket == b])
         self._recheck.clear()
         self.pack_host_calls += 1
         return self.staging
@@ -387,22 +572,3 @@ class ArenaEntry:
     def repack(self, buffers: Buffers, tree: Any) -> Buffers:
         leaves = tuple(jax.tree_util.tree_leaves(tree))
         return self.repack_jit(dict(buffers), leaves)
-
-
-def get_entry(tree: Any, align_elems: int = 1,
-              sharding: Any = None) -> ArenaEntry:
-    """The engine's front door: cached ``ArenaEntry`` for this tree's shape.
-
-    LRU-bounded at :data:`ENTRY_CACHE_MAX`: evicted entries stay usable for
-    any scheme still holding them, they just stop being shared."""
-    k = num_shards_of(sharding)
-    key = _layout_key(tree, align_elems, k)
-    entry = _ENTRY_CACHE.get(key)
-    if entry is None:
-        entry = ArenaEntry(_plan_for_key(key, tree, align_elems, k))
-        _ENTRY_CACHE[key] = entry
-        _trim_caches()
-    else:
-        _STATS["hits"] += 1
-        _ENTRY_CACHE.move_to_end(key)
-    return entry

@@ -1,10 +1,19 @@
-"""Transfer schemes — the paper's three ways to deep-copy a nested tree.
+"""Transfer schemes — thin executors of a :class:`TransferSpec`.
 
   * :class:`UVMScheme`          — demand-paged analogue: leaf-granular,
                                   on-access transfers at arbitrary times.
   * :class:`MarshalScheme`      — Algorithm 1: pack into contiguous arenas,
                                   one DMA per dtype bucket, attach views.
   * :class:`PointerChainScheme` — declared chains only (selective deep copy).
+
+A scheme is constructed from a spec via :func:`transfer_scheme` /
+:meth:`TransferScheme.from_spec`; the spec's axes (delta, sharding,
+staging, alignment, placement) compose orthogonally and are validated by
+the capability matrix in :mod:`repro.core.spec`.  Persistent state —
+cached layouts/entries, retained delta buckets, ledger lifecycle — lives
+in a :class:`~repro.core.engine.TransferSession`.  The legacy constructors
+(``SCHEMES`` / :func:`make_scheme` / the old keyword signatures) remain as
+deprecation shims that build the equivalent spec and warn.
 
 Every scheme records its traffic in a :class:`TransferLedger` so tests and
 benchmarks can assert the paper's data-motion claims structurally (bytes
@@ -14,8 +23,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import weakref
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +33,7 @@ import numpy as np
 from . import arena as arena_lib
 from . import engine as engine_lib
 from .chainref import ChainRef, declare, extract, insert
+from .spec import TransferSpec, UnsupportedSpecError
 from .treepath import TreePath, leaf_items
 
 
@@ -46,9 +56,11 @@ class TransferLedger:
     delta transfer proved unchanged and did NOT move, so per pass
     ``h2d_bytes + skipped_bytes`` equals the full-marshal motion.
     ``delta_calls`` counts transfer passes that reused at least one clean
-    bucket.  ``*_by_device`` split the same exact totals per target device
-    (sharded transfers); an unsharded path records everything under its one
-    device.
+    bucket (or bucket shard).  ``*_by_device`` split the same exact totals
+    per target device — including ``skipped_bytes_by_device``, so the
+    per-device equality ``h2d + skipped == full sharded motion`` holds on
+    EVERY device of a sharded delta transfer; an unsharded path records
+    everything under its one device.
     """
 
     h2d_bytes: int = 0
@@ -62,19 +74,28 @@ class TransferLedger:
     delta_calls: int = 0     # transfer passes that skipped >=1 clean bucket
     h2d_bytes_by_device: Dict[str, int] = dataclasses.field(default_factory=dict)
     h2d_calls_by_device: Dict[str, int] = dataclasses.field(default_factory=dict)
+    skipped_bytes_by_device: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def _device_key(device: Any) -> str:
+        return str(getattr(device, "id", device))
 
     def record_h2d(self, nbytes: int, device: Optional[Any] = None) -> None:
         self.h2d_bytes += int(nbytes)
         self.h2d_calls += 1
         if device is not None:
-            key = str(getattr(device, "id", device))
+            key = self._device_key(device)
             self.h2d_bytes_by_device[key] = \
                 self.h2d_bytes_by_device.get(key, 0) + int(nbytes)
             self.h2d_calls_by_device[key] = \
                 self.h2d_calls_by_device.get(key, 0) + 1
 
-    def record_skip(self, nbytes: int) -> None:
+    def record_skip(self, nbytes: int, device: Optional[Any] = None) -> None:
         self.skipped_bytes += int(nbytes)
+        if device is not None:
+            key = self._device_key(device)
+            self.skipped_bytes_by_device[key] = \
+                self.skipped_bytes_by_device.get(key, 0) + int(nbytes)
 
     def record_d2h(self, nbytes: int) -> None:
         self.d2h_bytes += int(nbytes)
@@ -91,6 +112,31 @@ class TransferLedger:
                     self.h2d_calls_by_device.get(d, 0))
                 for d in self.h2d_bytes_by_device}
 
+    def as_dict(self) -> Dict[str, Any]:
+        """Every field as plain data (maps copied) — THE row format for
+        benchmark persistence and cross-ledger comparison; adding a ledger
+        field automatically adds the column everywhere this is used."""
+        return dataclasses.asdict(self)
+
+    def merge(self, *others: "TransferLedger") -> "TransferLedger":
+        """Accumulate other ledgers into this one (exact counters add; the
+        per-device maps union-add).  Returns self, so
+        ``TransferLedger().merge(a, b)`` is the non-destructive sum."""
+        for o in others:
+            self.h2d_bytes += o.h2d_bytes
+            self.d2h_bytes += o.d2h_bytes
+            self.h2d_calls += o.h2d_calls
+            self.d2h_calls += o.d2h_calls
+            self.skipped_bytes += o.skipped_bytes
+            self.delta_calls += o.delta_calls
+            self.record_wall(o.enqueue_s, o.sync_s)
+            for field in ("h2d_bytes_by_device", "h2d_calls_by_device",
+                          "skipped_bytes_by_device"):
+                mine = getattr(self, field)
+                for k, v in getattr(o, field).items():
+                    mine[k] = mine.get(k, 0) + v
+        return self
+
     def reset(self) -> None:
         self.h2d_bytes = self.d2h_bytes = 0
         self.h2d_calls = self.d2h_calls = 0
@@ -98,24 +144,104 @@ class TransferLedger:
         self.skipped_bytes = self.delta_calls = 0
         self.h2d_bytes_by_device.clear()
         self.h2d_calls_by_device.clear()
+        self.skipped_bytes_by_device.clear()
+
+
+def _legacy_spec(kind: str, device: Any = None, align_elems: int = 1,
+                 delta: bool = False, sharding: Any = None) -> TransferSpec:
+    """The old keyword surface, expressed as a spec."""
+    dev_index = None
+    if device is not None:
+        dev_index = device if isinstance(device, int) \
+            else jax.devices().index(device)
+    return TransferSpec(kind=kind, delta=delta, sharding=sharding,
+                        align_elems=align_elems, device=dev_index)
+
+
+def _warn_legacy(what: str) -> None:
+    warnings.warn(
+        f"deprecated: {what} — construct a TransferSpec (or spec string) and "
+        "use transfer_scheme()/TransferScheme.from_spec() instead",
+        DeprecationWarning, stacklevel=3)
+
+
+def _default_dp_sharding(k: int):
+    """A 1-D "data" NamedSharding over the first ``k`` devices — what an
+    int sharding axis (``@dp{k}``) executes on."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    mesh = jax.make_mesh((k,), ("data",))
+    return NamedSharding(mesh, PartitionSpec("data"))
 
 
 class TransferScheme:
     """Protocol: move a nested state tree host<->device under a policy.
 
-    ``sharding`` (a ``NamedSharding``) makes the scheme place data across
-    every device of the sharding's mesh instead of on one device; the
-    ledger then additionally records exact per-device bytes/DMA counts.
+    Thin executor over a (spec, session) pair: the spec describes the
+    policy, the session owns the reusable state.  A ``sharding`` axis (a
+    ``NamedSharding``, or an int executed on the default 1-D data mesh)
+    makes the scheme place data across every device of the sharding's mesh
+    instead of on one device; the ledger then additionally records exact
+    per-device bytes/DMA counts.
     """
 
+    kind: str = "marshal"
     name: str = "base"
+    # what the SECOND positional argument meant before the spec redesign
+    # (TransferScheme/UVM/PointerChain took (device, sharding)); MarshalScheme
+    # overrides with "align_elems".  Lets old positional call sites hit the
+    # deprecation shim instead of binding into `session`.
+    _second_legacy_kw: str = "sharding"
 
-    def __init__(self, device: Optional[Any] = None,
-                 sharding: Optional[Any] = None):
-        self.device = device or jax.devices()[0]
+    def __init__(self, spec: Union[TransferSpec, str, None] = None,
+                 session: Optional[engine_lib.TransferSession] = None,
+                 **legacy: Any):
+        if session is not None and not isinstance(
+                session, engine_lib.TransferSession):
+            legacy = dict(legacy, **{self._second_legacy_kw: session})
+            session = None
+        if legacy or not isinstance(spec, (TransferSpec, str, type(None))):
+            # the pre-spec keyword surface (device=, sharding=, ...):
+            # accepted, warned, and routed through a TransferSpec
+            _warn_legacy(f"{type(self).__name__}({'device=..., ' if spec is not None else ''}"
+                         f"{', '.join(f'{k}=...' for k in legacy)}) keyword construction")
+            if spec is not None:
+                legacy = dict(legacy, device=spec)
+            spec = _legacy_spec(self.kind, **legacy)
+        spec = TransferSpec.parse(spec) if spec is not None \
+            else TransferSpec(kind=self.kind)
+        if spec.kind != self.kind:
+            raise UnsupportedSpecError(
+                f"{type(self).__name__} executes kind={self.kind!r} specs, "
+                f"got {spec}")
+        self.spec = spec
+        self.session = session if session is not None \
+            else engine_lib.get_session()
+        sharding = spec.sharding
+        if isinstance(sharding, int):
+            sharding = None if sharding == 1 and spec.device is None \
+                else _default_dp_sharding(sharding)
         self.sharding = sharding
-        self.target = sharding if sharding is not None else self.device
-        self.ledger = TransferLedger()
+        devices = jax.devices()
+        if spec.device is not None and spec.device >= len(devices):
+            raise UnsupportedSpecError(
+                f"spec {spec} names device index {spec.device}, but only "
+                f"{len(devices)} devices are visible")
+        self.device = devices[spec.device or 0]
+        self.target = self.sharding if self.sharding is not None else self.device
+        self.ledger = self.session.make_ledger()
+        self.name = spec.name
+
+    @classmethod
+    def from_spec(cls, spec: Union[TransferSpec, str],
+                  session: Optional[engine_lib.TransferSession] = None,
+                  **kw: Any) -> "TransferScheme":
+        """THE front door: executor for ``spec`` (string or dataclass),
+        dispatched on its kind.  ``session`` defaults to the process
+        session; ``shared_state=True`` (delta specs) makes executors of the
+        same spec share the session's retained device state."""
+        spec = TransferSpec.parse(spec)
+        return _EXECUTORS[spec.kind](spec, session, **kw)
 
     def _shard_devices(self) -> list:
         return list(self.sharding.mesh.devices.flat)
@@ -236,6 +362,7 @@ class UVMScheme(TransferScheme):
     ``materialize`` (a kernel touching the tree) triggers the faults.
     """
 
+    kind = "uvm"
     name = "uvm"
 
     def to_device(self, tree, paths=None):
@@ -315,49 +442,53 @@ class MarshalScheme(TransferScheme):
     later call is pure data motion: in-place staging writes, one enqueued
     DMA per dtype bucket synchronized once, one fused-gather attach.
 
-    Three placement policies share the engine:
+    The spec axes compose over the shared engine:
 
-    * default          — one device, every bucket shipped, blocking sync
-                         before staging may be rewritten (DESIGN.md §4.3).
-    * ``delta=True``   — steady-state incremental transfers: the scheme
-                         retains the device copy of every bucket and
-                         re-ships only buckets whose staging version moved;
-                         clean buckets are ``skipped_bytes`` in the ledger.
-                         Non-blocking: staging safety comes from per-buffer
-                         fences + double buffering (DESIGN.md §7), so the
-                         next ``pack_host`` overlaps this call's DMA.
-    * ``sharding=...`` — per-device arenas: every bucket is padded to a
-                         per-device multiple and split into equal contiguous
-                         shards; ALL (bucket x device) transfers are
-                         enqueued before one sync, then each bucket is
-                         assembled into one global sharded array.
+    * default               — one device, every bucket shipped, blocking
+                              sync before staging may be rewritten (§4.3).
+    * ``staging=db``        — same full motion, but non-blocking: staging
+                              safety comes from the per-buffer fences, so
+                              the next ``pack_host`` overlaps this call's
+                              DMA (the §7 pipeline without the delta skip).
+    * ``delta``             — steady-state incremental transfers: the
+                              executor's :class:`~repro.core.engine.DeltaState`
+                              retains the device copy of every bucket and
+                              re-ships only buckets whose staging version
+                              moved; clean buckets are ``skipped_bytes``.
+    * ``sharding``          — per-device arenas: every bucket is padded to
+                              a per-device multiple and split into equal
+                              contiguous shards; ALL (bucket x device)
+                              transfers are enqueued before one sync, then
+                              each bucket is assembled into one global
+                              sharded array.
+    * ``delta + sharding``  — per-(bucket, device) incremental transfers:
+                              a dirty bucket re-ships ONLY the shards whose
+                              bytes moved (``ArenaEntry.shard_versions``);
+                              clean shards are skipped per device, keeping
+                              ``h2d + skipped == full sharded motion`` exact
+                              on every device of the mesh.
     """
 
+    kind = "marshal"
     name = "marshal"
+    _second_legacy_kw = "align_elems"   # MarshalScheme(device, align_elems, …)
 
-    def __init__(self, device: Optional[Any] = None, align_elems: int = 1,
-                 delta: bool = False, sharding: Optional[Any] = None):
-        super().__init__(device, sharding)
-        if delta and sharding is not None:
-            raise ValueError("delta transfers and sharded arenas cannot be "
-                             "combined yet; pick one")
-        self.align_elems = align_elems
-        self.delta = delta
-        if delta:
-            self.name = "marshal_delta"
+    def __init__(self, spec=None, session=None, shared_state: bool = False,
+                 **legacy):
+        super().__init__(spec, session, **legacy)
+        self.align_elems = self.spec.align_elems
+        self.delta = self.spec.delta
+        self.staging = self.spec.staging
         self.layout: Optional[arena_lib.ArenaLayout] = None
         self._entry: Optional[engine_lib.ArenaEntry] = None
-        # delta state is PER SCHEME INSTANCE (entries are shared globally):
-        # entry -> {bucket: (shipped version, retained device buffer)}
-        self._retained: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
-        # entry -> (versions snapshot, unpacked device tree): a repeat pass
-        # with ZERO dirty buckets returns the memoized (immutable) tree —
-        # no DMA, no gather dispatch, pure fingerprint walk.
-        self._last_unpack: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+        # retained delta state lives in the SESSION (its device memory has
+        # a lifecycle); per executor by default, per spec when shared.
+        self._delta_state = self.session.delta_state(
+            self.spec if shared_state else None)
 
     def _entry_for(self, tree) -> engine_lib.ArenaEntry:
-        entry = engine_lib.get_entry(tree, self.align_elems,
-                                     sharding=self.sharding)
+        entry = self.session.get_entry(tree, self.align_elems,
+                                       sharding=self.sharding)
         self._entry = entry
         self.layout = entry.layout
         return entry
@@ -377,12 +508,16 @@ class MarshalScheme(TransferScheme):
     def to_device(self, tree, paths=None):
         # 1) determineTotalBytes + requestList (cached); 2) pack into the
         # persistent staging arena; 3) ONE enqueued transfer per dtype
-        # bucket (per device when sharded, only dirty buckets when delta);
-        # 4) attach = fused gather over device buffers.
+        # bucket (per device when sharded, only dirty buckets/shards when
+        # delta); 4) attach = fused gather over device buffers.
+        if self.delta and self.sharding is not None:
+            return self._to_device_delta_sharded(tree)
         if self.sharding is not None:
             return self._to_device_sharded(tree)
         if self.delta:
             return self._to_device_delta(tree)
+        if self.staging == "double_buffered":
+            return self._to_device_pipelined(tree)
         entry = self._entry_for(tree)
         buffers = entry.pack_host(tree)
         names = list(buffers)
@@ -394,34 +529,55 @@ class MarshalScheme(TransferScheme):
         # live device value still reads staging when we return.
         return jax.block_until_ready(out)
 
+    def _record_fence_wait(self, entry) -> None:
+        fence_s = entry.take_fence_wait()
+        if fence_s:
+            self.ledger.record_wall(0.0, fence_s)
+
+    # -- double-buffered full transfers (the §7 pipeline, no delta skip) -----
+    def _to_device_pipelined(self, tree):
+        entry = self._entry_for(tree)
+        buffers = entry.pack_host(tree)
+        self._record_fence_wait(entry)
+        names = list(buffers)
+        dev = self._put_batch([buffers[b] for b in names], sync=False)
+        out_leaves = entry.unpack_leaves_jit(dict(zip(names, dev)))
+        out = jax.tree_util.tree_unflatten(entry.layout.treedef,
+                                           list(out_leaves))
+        for b, arr in zip(names, dev):
+            entry.add_fence(b, [arr])
+        for b in names:
+            entry.add_fence(b, [out_leaves[i]
+                                for i in entry._bucket_slots[b]])
+        return out
+
     # -- delta: dirty-bucket incremental transfers ---------------------------
     def _to_device_delta(self, tree):
         entry = self._entry_for(tree)
         buffers = entry.pack_host(tree, trust_identity=True)
         # fence waits done inside pack_host are this path's sync cost
-        fence_s = entry.take_fence_wait()
-        if fence_s:
-            self.ledger.record_wall(0.0, fence_s)
-        retained = self._retained.setdefault(entry, {})
+        self._record_fence_wait(entry)
+        retained = self._delta_state.retained.setdefault(entry, {})
         names = list(buffers)
         bucket_bytes = entry.layout.bucket_bytes()
         dirty = [b for b in names
                  if retained.get(b, (None, None))[0] != entry.versions[b]]
         clean = [b for b in names if b not in dirty]
         if not dirty:
-            memo = self._last_unpack.get(entry)
+            memo = self._delta_state.last_unpack.get(entry)
             if memo is not None and memo[0] == entry.versions:
                 # fully clean repeat: the previously attached device tree is
                 # immutable and still bit-identical — return it as-is.
                 for b in clean:
-                    self.ledger.record_skip(bucket_bytes[b])
+                    self.ledger.record_skip(bucket_bytes[b],
+                                            device=self.device)
                 self.ledger.delta_calls += 1
                 return memo[1]
         dev = self._put_batch([buffers[b] for b in dirty], sync=False)
         for b, arr in zip(dirty, dev):
             retained[b] = (entry.versions[b], arr)
         for b in clean:
-            self.ledger.record_skip(bucket_bytes[b])
+            self.ledger.record_skip(bucket_bytes[b], device=self.device)
         if clean:
             self.ledger.delta_calls += 1
         out_leaves = entry.unpack_leaves_jit(
@@ -440,7 +596,7 @@ class MarshalScheme(TransferScheme):
         for b in names:
             entry.add_fence(b, [out_leaves[i]
                                 for i in entry._bucket_slots[b]])
-        self._last_unpack[entry] = (dict(entry.versions), out)
+        self._delta_state.last_unpack[entry] = (dict(entry.versions), out)
         return out
 
     # -- sharded: per-device arenas ------------------------------------------
@@ -448,6 +604,16 @@ class MarshalScheme(TransferScheme):
         mesh = self.sharding.mesh
         from jax.sharding import NamedSharding, PartitionSpec
         return NamedSharding(mesh, PartitionSpec(tuple(mesh.axis_names)))
+
+    def _shard_device_order(self) -> list:
+        """Devices in shard order: device ``i`` of this list owns the i-th
+        contiguous sub-range of every bucket (the even 1-D split gives every
+        bucket the same order)."""
+        bsh = self._bucket_sharding()
+        k = engine_lib.num_shards_of(self.sharding)
+        items = [((0 if sl.start is None else int(sl.start)), d)
+                 for d, (sl,) in bsh.devices_indices_map((k,)).items()]
+        return [d for _, d in sorted(items, key=lambda t: t[0])]
 
     def _to_device_sharded(self, tree):
         entry = self._entry_for(tree)
@@ -487,6 +653,73 @@ class MarshalScheme(TransferScheme):
                 (int(buffers[b].shape[0]),), bsh, [s[3] for s in shards])
         return out
 
+    # -- delta x sharding: per-(bucket, device) incremental transfers --------
+    def _to_device_delta_sharded(self, tree):
+        """The composed axes: pack versions per shard, re-ship ONLY the
+        (bucket, device) shards whose bytes moved, book every clean shard
+        as skipped bytes ON ITS DEVICE, and assemble each bucket from the
+        retained + fresh per-shard arrays.  Non-blocking like the unsharded
+        delta path: staging safety is the per-buffer fence discipline plus
+        range disjointness (a clean shard's byte range is never rewritten
+        while its retained array is live — see engine.py)."""
+        entry = self._entry_for(tree)
+        buffers = entry.pack_host(tree, trust_identity=True)
+        self._record_fence_wait(entry)
+        retained = self._delta_state.retained.setdefault(entry, {})
+        names = list(buffers)
+        order = self._shard_device_order()
+        k = len(order)
+        ranges = arena_lib.shard_ranges(entry.layout, k)
+        ships: List[tuple] = []   # (bucket, shard, lo, hi, device)
+        skips: List[tuple] = []   # (bucket, shard, nbytes, device)
+        for b in names:
+            held = retained.setdefault(b, [None] * k)
+            itemsize = np.dtype(b).itemsize
+            for s, ((lo, hi), dev) in enumerate(zip(ranges[b], order)):
+                ver = entry.shard_versions[b][s]
+                if held[s] is None or held[s][0] != ver:
+                    ships.append((b, s, lo, hi, dev))
+                else:
+                    skips.append((b, s, (hi - lo) * itemsize, dev))
+        if not ships:
+            memo = self._delta_state.last_unpack.get(entry)
+            if memo is not None and memo[0] == entry.shard_versions:
+                # fully clean repeat: zero DMA, zero dispatch — every shard
+                # of every bucket is booked as skipped on its device.
+                for b, s, nbytes, dev in skips:
+                    self.ledger.record_skip(nbytes, device=dev)
+                self.ledger.delta_calls += 1
+                return memo[1]
+        t0 = time.perf_counter()
+        new = [(b, s, dev, jax.device_put(buffers[b][lo:hi], dev))
+               for b, s, lo, hi, dev in ships]
+        self.ledger.record_wall(time.perf_counter() - t0, 0.0)
+        for (b, s, lo, hi, dev), (_, _, _, arr) in zip(ships, new):
+            retained[b][s] = (entry.shard_versions[b][s], arr)
+            self.ledger.record_h2d((hi - lo) * np.dtype(b).itemsize,
+                                   device=dev)
+        for b, s, nbytes, dev in skips:
+            self.ledger.record_skip(nbytes, device=dev)
+        if skips:
+            self.ledger.delta_calls += 1
+        bsh = self._bucket_sharding()
+        assembled = {
+            b: jax.make_array_from_single_device_arrays(
+                (int(entry.layout.bucket_sizes[b]),), bsh,
+                [retained[b][s][1] for s in range(k)])
+            for b in names}
+        out_leaves = entry.unpack_leaves_jit(assembled)
+        out = jax.tree_util.tree_unflatten(entry.layout.treedef,
+                                           list(out_leaves))
+        for b, s, dev, arr in new:
+            entry.add_fence(b, [arr])
+        for b in names:
+            entry.add_fence(b, [out_leaves[i]
+                                for i in entry._bucket_slots[b]])
+        self._delta_state.last_unpack[entry] = (
+            {b: list(v) for b, v in entry.shard_versions.items()}, out)
+        return out
+
     def from_device(self, device_tree, host_tree, paths=None):
         # demarshal: fused scatter repack on device, batched D2H per bucket
         entry = self._entry if self._entry is not None \
@@ -502,11 +735,11 @@ class MarshalScheme(TransferScheme):
 # ---------------------------------------------------------------------------
 
 class PointerChainScheme(TransferScheme):
+    kind = "pointerchain"
     name = "pointerchain"
 
-    def __init__(self, device: Optional[Any] = None,
-                 sharding: Optional[Any] = None):
-        super().__init__(device, sharding)
+    def __init__(self, spec=None, session=None, **legacy):
+        super().__init__(spec, session, **legacy)
         self.refs: tuple[ChainRef, ...] = ()
 
     def to_device(self, tree, paths=None):
@@ -541,20 +774,50 @@ class PointerChainScheme(TransferScheme):
         return insert(host_tree, self.refs, host_leaves)
 
 
-def _marshal_delta(**kw) -> MarshalScheme:
-    return MarshalScheme(delta=True, **kw)
-
-
-SCHEMES: dict[str, Callable[..., TransferScheme]] = {
+_EXECUTORS: Dict[str, Callable[..., TransferScheme]] = {
     "uvm": UVMScheme,
     "marshal": MarshalScheme,
-    "marshal_delta": _marshal_delta,
     "pointerchain": PointerChainScheme,
 }
 
 
+def transfer_scheme(spec: Union[TransferSpec, str],
+                    session: Optional[engine_lib.TransferSession] = None,
+                    **kw: Any) -> TransferScheme:
+    """Executor for ``spec`` — module-level alias of
+    :meth:`TransferScheme.from_spec`."""
+    return TransferScheme.from_spec(spec, session, **kw)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims — the pre-spec registry surface
+# ---------------------------------------------------------------------------
+
+def _legacy_factory(name: str, **kw) -> TransferScheme:
+    _warn_legacy(f"the scheme registry ({name!r})")
+    delta = bool(kw.pop("delta", False)) or name == "marshal_delta"
+    kind = "marshal" if name == "marshal_delta" else name
+    spec = _legacy_spec(kind, delta=delta, **kw)
+    return TransferScheme.from_spec(spec)
+
+
+def _named_factory(name: str) -> Callable[..., TransferScheme]:
+    def factory(**kw) -> TransferScheme:
+        return _legacy_factory(name, **kw)
+    factory.__name__ = f"make_{name}"
+    return factory
+
+
+SCHEMES: dict[str, Callable[..., TransferScheme]] = {
+    name: _named_factory(name)
+    for name in ("uvm", "marshal", "marshal_delta", "pointerchain")
+}
+
+
 def make_scheme(name: str, **kw) -> TransferScheme:
-    try:
-        return SCHEMES[name](**kw)
-    except KeyError:
+    """Deprecated: ``transfer_scheme(spec)`` is the composable front door
+    (every registry name parses as a spec string, e.g. ``"marshal_delta"``
+    == ``"marshal+delta"``)."""
+    if name not in SCHEMES:
         raise KeyError(f"unknown transfer scheme {name!r}; options: {sorted(SCHEMES)}")
+    return _legacy_factory(name, **kw)

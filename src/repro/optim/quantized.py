@@ -134,10 +134,10 @@ class OffloadedOptimizer:
     """
 
     def __init__(self, inner: Optimizer, scheme_name: str = "marshal"):
-        from ..core import make_scheme
+        from ..core import transfer_scheme
         self.inner = inner
-        self.scheme_name = scheme_name
-        self.scheme = make_scheme(scheme_name)
+        self.scheme_name = scheme_name     # any TransferSpec string
+        self.scheme = transfer_scheme(scheme_name)
         self._host_state: Any = None
 
     def init(self, params) -> None:
@@ -146,10 +146,10 @@ class OffloadedOptimizer:
             lambda l: np.asarray(jax.device_get(l)), state)
 
     def step(self, grads, params, lr):
-        from ..core import make_scheme
-        self.scheme = make_scheme(self.scheme_name)   # fresh ledger per step
+        from ..core import transfer_scheme
+        self.scheme = transfer_scheme(self.scheme_name)  # fresh ledger per step
         dev_state = self.scheme.to_device(self._host_state)
-        if self.scheme_name == "uvm":
+        if self.scheme.name == "uvm":
             dev_state = self.scheme.materialize(dev_state)
         new_params, new_state = self.inner.update(grads, dev_state, params, lr)
         self._host_state = jax.tree_util.tree_map(

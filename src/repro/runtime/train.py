@@ -24,6 +24,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..core import engine as engine_lib
+from ..core.spec import TransferSpec
 from ..models.registry import ModelApi
 from ..optim.optimizers import Optimizer
 from ..optim import compression
@@ -118,19 +119,22 @@ def make_dp_train_step(api: ModelApi, optimizer: Optimizer,
     axis = "data"
 
     dp_size = int(mesh.shape[axis])
+    # the gradient arena's transfer policy as a spec: marshalling arena,
+    # 128-element alignment for DMA/collective efficiency, buckets padded
+    # per dp shard — the same declarative axes the transfer schemes use.
+    grad_spec = grad_arena_spec(dp_size)
 
     def grad_sync(grads, error_state):
         if grad_scheme == "pertensor":
             return (jax.tree_util.tree_map(
                 lambda g: jax.lax.psum(g, axis), grads), error_state)
         # gradient arena via the persistent engine: the layout is planned
-        # once per treedef (cache shared with the transfer schemes) and the
-        # pack/unpack lower to one fused scatter/gather region per bucket.
-        # Sharding the plan by the dp degree pads every bucket to a
-        # per-device multiple, so the collective payload chunks evenly
+        # once per treedef (session cache shared with the transfer schemes)
+        # and the pack/unpack lower to one fused scatter/gather region per
+        # bucket.  Sharding the plan by the dp degree pads every bucket to
+        # a per-device multiple, so the collective payload chunks evenly
         # across the axis (reduce-scatter-ready; per-device arena layout).
-        layout = engine_lib.cached_plan(grads, align_elems=128,
-                                        sharding=dp_size)
+        layout = engine_lib.get_session().plan(grads, grad_spec)
         buffers = engine_lib.pack_traced(grads, layout)
         if compress:
             # exact shared-scale int8 all-reduce with error feedback:
@@ -195,6 +199,13 @@ def make_dp_train_step(api: ModelApi, optimizer: Optimizer,
     return wrapped
 
 
+def grad_arena_spec(dp_size: int = 1) -> TransferSpec:
+    """The gradient arena's policy point: one spec shared by the dp train
+    step and the error-feedback state so their plans are the SAME session
+    cache entry."""
+    return TransferSpec("marshal", align_elems=128, sharding=int(dp_size))
+
+
 def init_error_state(api: ModelApi, compress: bool,
                      mesh=None) -> Dict[str, Any]:
     if not compress:
@@ -204,8 +215,7 @@ def init_error_state(api: ModelApi, compress: bool,
     # uses, INCLUDING the per-device padding when the mesh is known (the
     # error-feedback buffers must match the padded bucket sizes exactly).
     dp_size = int(mesh.shape["data"]) if mesh is not None else 1
-    layout = engine_lib.cached_plan(params, align_elems=128,
-                                    sharding=dp_size)
+    layout = engine_lib.get_session().plan(params, grad_arena_spec(dp_size))
     pad = lambda n: -(-n // compression.CHUNK) * compression.CHUNK
     return {b: jnp.zeros((pad(n),), jnp.float32)
             for b, n in layout.bucket_sizes.items()}

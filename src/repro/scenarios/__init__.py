@@ -7,8 +7,8 @@ every benchmark entry point / differential test iterates
 :func:`iter_scenarios`.  See DESIGN.md §6 for the contract.
 """
 from .base import (Motion, PAPER_SCHEMES, Scenario, SCHEME_NAMES,
-                   SIZE_PRESETS, derive_motion, family_names, get_family,
-                   iter_scenarios, register)
+                   SIZE_PRESETS, derive_motion, derive_steady_motion,
+                   family_names, get_family, iter_scenarios, register)
 from .driver import (Measurement, SteadyMeasurement, motion_matches,
                      run_algorithm2, run_scenario, run_steady_scenario)
 from .families import (LINEAR_LAYOUTS, chain_access_set, data_sharding,
@@ -17,13 +17,15 @@ from .families import (LINEAR_LAYOUTS, chain_access_set, data_sharding,
                        dense_uvm_access_set, linear_case, linear_chain,
                        linear_expected, linear_tree, linear_used_paths,
                        mixed_dtype_case, mixed_dtype_tree, model_state_case,
-                       ragged_case, ragged_tree, sharded_case, sharded_tree,
+                       ragged_case, ragged_tree, sharded_case,
+                       sharded_delta_case, sharded_delta_steady_expected,
+                       sharded_delta_tree, sharded_tree,
                        steady_reuse_case, steady_reuse_tree,
                        wide_shallow_case, wide_shallow_tree)
 
 __all__ = [
     "Motion", "PAPER_SCHEMES", "Scenario", "SCHEME_NAMES", "SIZE_PRESETS",
-    "derive_motion",
+    "derive_motion", "derive_steady_motion",
     "family_names", "get_family", "iter_scenarios", "register",
     "Measurement", "SteadyMeasurement", "motion_matches", "run_algorithm2",
     "run_scenario", "run_steady_scenario",
@@ -38,5 +40,7 @@ __all__ = [
     "wide_shallow_case", "wide_shallow_tree",
     "model_state_case",
     "sharded_case", "sharded_tree",
+    "sharded_delta_case", "sharded_delta_steady_expected",
+    "sharded_delta_tree",
     "steady_reuse_case", "steady_reuse_tree",
 ]

@@ -18,11 +18,12 @@ benchmark entry point and the differential test harness iterate
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core import arena, declare, extract
+from repro.core import TransferSpec, arena, declare, extract
 
 SIZE_PRESETS = ("smoke", "quick", "full")
 SCHEME_NAMES = ("uvm", "marshal", "marshal_delta", "pointerchain")
@@ -41,12 +42,16 @@ class Motion:
     mesh must receive exactly those bytes in exactly those DMA batches
     (uniform split — the per-device arena contract).  ``None`` means the
     transfer is single-device and only the totals are checked.
+    ``by_shard`` declares a NON-uniform per-device split — (bytes, calls)
+    per shard index, in shard order — as a per-device delta transfer
+    produces (only the shards a mutation overlaps ship; the rest are 0).
     """
 
     h2d_bytes: int
     h2d_calls: int
     per_device_bytes: Optional[int] = None
     per_device_calls: Optional[int] = None
+    by_shard: Optional[Tuple[Tuple[int, int], ...]] = None
 
     def as_tuple(self) -> Tuple[int, int]:
         return (self.h2d_bytes, self.h2d_calls)
@@ -62,7 +67,8 @@ def _nbytes(x: Any) -> int:
 
 
 def derive_motion(tree: Any, used_paths: Sequence[str],
-                  uvm_access: Optional[Sequence[str]], scheme_name: str,
+                  uvm_access: Optional[Sequence[str]],
+                  scheme_name: Union[str, TransferSpec],
                   align_elems: int = 1, num_shards: int = 1) -> Motion:
     """Structural derivation of the expected data motion (no transfers run).
 
@@ -85,7 +91,11 @@ def derive_motion(tree: Any, used_paths: Sequence[str],
     This is the second, independent source the differential tests compare
     the ledger against; families with closed-form paper expectations
     (linear Eq. 1-2, dense Eq. 3) provide a third via ``Scenario.expected``.
+    ``scheme_name`` accepts a legacy registry name, a spec string, or a
+    :class:`TransferSpec` (only its kind/delta axes matter here — alignment
+    and shards stay explicit parameters).
     """
+    scheme_name = TransferSpec.parse(scheme_name).name
     k = int(num_shards)
     if scheme_name in ("marshal", "marshal_delta"):
         layout = arena.plan(tree, align_elems, shard_multiple=k)
@@ -111,6 +121,53 @@ def derive_motion(tree: Any, used_paths: Sequence[str],
             return Motion(total, len(faulted))
         return Motion(total, len(faulted) * k, total // k, len(faulted))
     raise KeyError(f"unknown scheme {scheme_name!r}; options: {SCHEME_NAMES}")
+
+
+def derive_steady_motion(tree: Any, mutate_paths: Sequence[str],
+                         num_shards: int = 1,
+                         align_elems: int = 1) -> Motion:
+    """Structural derivation of ONE steady-state delta pass: the exact
+    motion after mutating the leaves at ``mutate_paths`` on a warm
+    ``marshal+delta`` scheme.
+
+    * ``num_shards == 1`` — each dtype bucket holding a mutated leaf ships
+      whole (one DMA carrying the bucket's bytes); every other bucket is
+      skipped.
+    * ``num_shards > 1``  — per-(bucket, device) tracking: only the shard
+      sub-ranges the mutated slots overlap ship, one DMA per dirty
+      (bucket, shard); ``by_shard`` carries the non-uniform per-device
+      split in shard order.
+
+    The third leg of the steady-state differential: families declare
+    closed forms (``Scenario.steady_expected``), this derives the same
+    numbers structurally, and the ledger must equal both.
+    """
+    k = int(num_shards)
+    layout = arena.plan(tree, align_elems, shard_multiple=k)
+    slots = [layout.slots[r.flat_index]
+             for r in declare(tree, *mutate_paths)]
+    dirty_buckets = {s.bucket for s in slots if s.size}
+    if k == 1:
+        bb = layout.bucket_bytes()
+        return Motion(sum(bb[b] for b in dirty_buckets), len(dirty_buckets))
+    per_shard = [[0, 0] for _ in range(k)]
+    for bucket in sorted(dirty_buckets):
+        n = layout.bucket_sizes[bucket]
+        step = n // k
+        itemsize = np.dtype(bucket).itemsize
+        touched: set = set()
+        for s in slots:
+            if s.bucket != bucket or not s.size:
+                continue
+            touched.update(range(s.offset // step,
+                                 min((s.offset + s.size - 1) // step,
+                                     k - 1) + 1))
+        for i in touched:
+            per_shard[i][0] += step * itemsize
+            per_shard[i][1] += 1
+    return Motion(sum(b for b, _ in per_shard),
+                  sum(c for _, c in per_shard),
+                  by_shard=tuple((b, c) for b, c in per_shard))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,39 +197,65 @@ class Scenario:
     # plus the mesh size the closed forms were derived at.
     sharding: Optional[Callable[[], Any]] = None
     num_shards: int = 1
-    # steady_reuse scenarios: exact per-pass Motion of a steady-state delta
-    # transfer after mutating params["mutate_path"] (the dirty bucket only).
+    # steady-state scenarios: exact per-pass Motion of a steady delta
+    # transfer after mutating params["mutate_paths"] (the dirty buckets —
+    # or, per-device, the dirty bucket shards — only), and the spec the
+    # steady harness runs (defaults to plain "marshal+delta").
     steady_expected: Optional[Motion] = None
+    steady_spec: Optional[TransferSpec] = None
+
+    def specs(self) -> Tuple[TransferSpec, ...]:
+        """The transfer specs this scenario runs under — every scheme kind,
+        with the scenario's sharding axis applied.  Since the spec redesign
+        the axes compose, so sharded scenarios include ``marshal+delta``
+        (per-device delta) rather than excluding it."""
+        sh = self.num_shards if self.sharding is not None else None
+        return (TransferSpec("uvm", sharding=sh),
+                TransferSpec("marshal", sharding=sh),
+                TransferSpec("marshal", delta=True, sharding=sh),
+                TransferSpec("pointerchain", sharding=sh))
+
+    def scheme_for(self, spec: Union[str, TransferSpec], session=None):
+        """Executor for ``spec`` aimed at this scenario's target: an int
+        sharding axis resolves to the scenario's own (lazily built)
+        NamedSharding so closed forms and placement agree."""
+        from repro.core import transfer_scheme
+
+        spec = TransferSpec.parse(spec)
+        if self.sharding is not None and isinstance(spec.sharding, int):
+            spec = spec.replace(sharding=self.sharding())
+        return transfer_scheme(spec, session)
 
     def scheme_names(self) -> Tuple[str, ...]:
-        """The schemes this scenario runs under: delta transfers are
-        single-device, so sharded scenarios exclude ``marshal_delta``."""
-        if self.sharding is not None:
-            return tuple(s for s in SCHEME_NAMES if s != "marshal_delta")
-        return SCHEME_NAMES
+        """Deprecated: iterate :meth:`specs` (names are ``spec.name``)."""
+        warnings.warn("deprecated: Scenario.scheme_names() — iterate "
+                      "Scenario.specs() instead", DeprecationWarning,
+                      stacklevel=2)
+        return tuple(s.name for s in self.specs())
 
     def make_scheme(self, scheme_name: str):
-        """Scheme instance aimed at this scenario's target (sharded or not)."""
-        from repro.core import make_scheme as _make
+        """Deprecated: ``Scenario.scheme_for(spec)`` is the composable
+        front door."""
+        warnings.warn("deprecated: Scenario.make_scheme(name) — use "
+                      "Scenario.scheme_for(spec) instead", DeprecationWarning,
+                      stacklevel=2)
+        return self.scheme_for(scheme_name)
 
-        if self.sharding is not None:
-            return _make(scheme_name, sharding=self.sharding())
-        return _make(scheme_name)
-
-    def expected_motion(self, scheme_name: str, tree: Any = None,
-                        align_elems: int = 1) -> Motion:
+    def expected_motion(self, scheme: Union[str, TransferSpec],
+                        tree: Any = None, align_elems: int = 1) -> Motion:
         """Closed-form expectation if declared, else structural derivation.
 
         The closed forms assume the schemes' default tight packing; a
         scheme with ``align_elems > 1`` pads marshalling buckets, so such
         calls always fall through to the structural derivation.
         """
-        if align_elems == 1 and self.expected and scheme_name in self.expected:
-            return self.expected[scheme_name]
+        name = TransferSpec.parse(scheme).name
+        if align_elems == 1 and self.expected and name in self.expected:
+            return self.expected[name]
         if tree is None:
             tree = self.build()
         return derive_motion(tree, self.used_paths, self.uvm_access,
-                             scheme_name, align_elems,
+                             name, align_elems,
                              num_shards=self.num_shards)
 
     def validate(self, tree: Any = None) -> None:

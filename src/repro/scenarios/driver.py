@@ -2,8 +2,9 @@
 
 The seed's ``run_algorithm2`` dispatched on the scheme name with an
 if/elif ladder; every new scheme meant forking the harness.  The policy
-now lives in :meth:`TransferScheme.stage` (schemes.py), so this driver is
-one straight-line pass for ANY scheme:
+now lives in :meth:`TransferScheme.stage` (schemes.py) and the policy
+*description* in a :class:`TransferSpec`, so this driver is one
+straight-line pass for ANY spec:
 
     stage (transfer under the policy) -> extract declared leaves ->
     kernel -> insert -> from_device -> check (line 7) -> kernel-only timing
@@ -11,19 +12,23 @@ one straight-line pass for ANY scheme:
 and :func:`run_scenario` additionally verifies the ledger against the
 scenario's analytic :class:`~repro.scenarios.base.Motion` expectation —
 the differential harness every benchmark entry point now shares.
+:func:`run_steady_scenario` is the steady-state half: warm a delta
+executor, mutate, and assert the exact per-pass (and, for sharded specs,
+per-device) dirty motion.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
 import numpy as np
 
-from repro.core import declare, extract, insert, make_scheme
+from repro.core import (TransferSpec, declare, extract, insert,
+                        transfer_scheme)
 
-from .base import Motion, Scenario
+from .base import Motion, Scenario, derive_steady_motion
 
 
 @dataclasses.dataclass
@@ -38,6 +43,7 @@ class Measurement:
     expected: Optional[Motion] = None
     skipped_bytes: int = 0                # delta path: bytes proven clean
     per_device: Optional[dict] = None     # {device: (bytes, calls)}
+    spec: Optional[str] = None            # canonical TransferSpec string
 
 
 def motion_matches(ledger, expected: Motion, num_shards: int = 1) -> bool:
@@ -75,22 +81,23 @@ def _check_rtol(leaf: Any) -> float:
 
 
 def run_algorithm2(tree: Any, used_paths: Sequence[str],
-                   scheme_name: Optional[str] = None, *,
+                   spec: Union[str, TransferSpec, None] = None, *,
                    uvm_access: Optional[Sequence[str]] = None,
                    kernel_repeats: int = 1,
                    scheme: Optional[Any] = None) -> Measurement:
     """One full Algorithm-2 pass; returns wall/kernel time + motion stats.
 
-    Pass ``scheme`` to reuse a scheme instance (and with it the arena
-    engine's cached layouts / staging buffers / compiled kernels) across
-    repeats — the steady-state the engine is built for.  The ledger is reset
-    so the returned Measurement still reports per-pass data motion.
+    ``spec`` is a :class:`TransferSpec` or spec string (legacy registry
+    names parse as aliases).  Pass ``scheme`` to reuse an executor (and
+    with it the session's cached layouts / staging buffers / compiled
+    kernels) across repeats — the steady-state the engine is built for.
+    The ledger is reset so the returned Measurement still reports per-pass
+    data motion.
     """
     if scheme is None:
-        if scheme_name is None:
-            raise ValueError("need scheme_name or a scheme instance")
-        scheme = make_scheme(scheme_name)
-    name = scheme_name or scheme.name
+        if spec is None:
+            raise ValueError("need a spec or a scheme instance")
+        scheme = transfer_scheme(spec)
     scheme.ledger.reset()
     kernel = _KERNEL
 
@@ -128,13 +135,14 @@ def run_algorithm2(tree: Any, used_paths: Sequence[str],
     jax.block_until_ready(out)
     kernel_us = (time.perf_counter() - t0) / max(1, kernel_repeats) * 1e6
 
-    return Measurement(name, wall, kernel_us,
+    return Measurement(scheme.name, wall, kernel_us,
                        scheme.ledger.h2d_bytes, scheme.ledger.h2d_calls, ok,
                        skipped_bytes=scheme.ledger.skipped_bytes,
-                       per_device=scheme.ledger.per_device() or None)
+                       per_device=scheme.ledger.per_device() or None,
+                       spec=str(getattr(scheme, "spec", "")) or None)
 
 
-def run_scenario(sc: Scenario, scheme_name: Optional[str] = None, *,
+def run_scenario(sc: Scenario, spec: Union[str, TransferSpec, None] = None, *,
                  scheme: Optional[Any] = None, tree: Any = None,
                  kernel_repeats: int = 1) -> Measurement:
     """Algorithm 2 over a registry scenario, with the differential motion
@@ -144,10 +152,10 @@ def run_scenario(sc: Scenario, scheme_name: Optional[str] = None, *,
     if tree is None:
         tree = sc.build()
     if scheme is None:
-        if scheme_name is None:
-            raise ValueError("need scheme_name or a scheme instance")
-        scheme = sc.make_scheme(scheme_name)
-    m = run_algorithm2(tree, list(sc.used_paths), scheme_name,
+        if spec is None:
+            raise ValueError("need a spec or a scheme instance")
+        scheme = sc.scheme_for(spec)
+    m = run_algorithm2(tree, list(sc.used_paths),
                        uvm_access=list(sc.uvm_access) if sc.uvm_access
                        else None,
                        kernel_repeats=kernel_repeats, scheme=scheme)
@@ -166,44 +174,103 @@ class SteadyMeasurement:
     skipped_bytes: int
     wall_us: float
     ok: bool                     # round-trip still equals the host tree
-    motion_ok: bool              # ledger == sc.steady_expected exactly
+    motion_ok: bool              # ledger == the steady expectation exactly
+    spec: Optional[str] = None
+    # sharded steady passes: the exact per-device split of the same pass
+    h2d_by_device: Optional[Dict[str, int]] = None
+    skipped_by_device: Optional[Dict[str, int]] = None
+
+
+def _steady_mutate_paths(sc: Scenario) -> List[str]:
+    paths = sc.params.get("mutate_paths")
+    if paths is None and "mutate_path" in sc.params:
+        paths = (sc.params["mutate_path"],)
+    if not paths:
+        raise ValueError(f"{sc.name} is not a steady-state scenario "
+                         "(no mutate_path/mutate_paths param)")
+    return list(paths)
 
 
 def run_steady_scenario(sc: Scenario, *, passes: int = 3,
-                        scheme: Optional[Any] = None) -> List[SteadyMeasurement]:
-    """Steady-state harness for ``steady_reuse`` scenarios: warm the delta
-    scheme with one full transfer, then repeatedly mutate the leaf at
-    ``params['mutate_path']`` and re-transfer.  Every steady pass must ship
-    EXACTLY the mutated leaf's dtype bucket (``sc.steady_expected``,
-    ledger-verified equality, not a bound) and skip every other bucket; the
-    round-trip must keep matching the mutated host tree leaf-for-leaf.
+                        scheme: Optional[Any] = None,
+                        spec: Union[str, TransferSpec, None] = None
+                        ) -> List[SteadyMeasurement]:
+    """Steady-state harness: warm a delta executor with one full transfer,
+    then repeatedly mutate the leaves at ``params['mutate_paths']`` and
+    re-transfer.  Every steady pass must ship EXACTLY the mutated leaves'
+    dtype buckets — or, under a sharded spec, only the (bucket, device)
+    shards the mutation overlaps — verified as ledger equalities (not
+    bounds): totals, the ``by_shard`` split when declared, and on every
+    device of a sharded mesh the exact complement
+    ``h2d_bytes_by_device[d] + skipped_bytes_by_device[d] == full sharded
+    marshal bytes[d]``.  The round-trip must keep matching the mutated
+    host tree leaf-for-leaf.
+
+    ``spec`` defaults to the scenario's ``steady_spec`` (or plain
+    ``marshal+delta``); the expectation is the scenario's closed-form
+    ``steady_expected`` when the spec matches it, else the structural
+    :func:`derive_steady_motion` — so ANY delta spec can be driven over
+    any steady scenario (e.g. ``marshal+delta@dp8`` over ``steady_reuse``).
     """
     from repro.core import TreePath
 
-    if sc.steady_expected is None or "mutate_path" not in sc.params:
-        raise ValueError(f"{sc.name} is not a steady_reuse scenario")
+    mutate = _steady_mutate_paths(sc)
+    if spec is not None:
+        want_spec = TransferSpec.parse(spec)
+    elif scheme is not None:
+        want_spec = scheme.spec
+    else:
+        want_spec = sc.steady_spec or TransferSpec.parse("marshal+delta")
+    if not want_spec.delta:
+        raise ValueError(f"steady harness needs a delta spec, got {want_spec}")
+    if scheme is None:
+        scheme = sc.scheme_for(want_spec)
     tree = sc.build()
-    scheme = scheme or make_scheme("marshal_delta")
     scheme.to_device(tree)                      # warm-up: full cold transfer
-    full_bytes = sum(scheme.layout.bucket_bytes().values())
-    tp = TreePath.parse(sc.params["mutate_path"])
+    layout = scheme.layout
+    full_bytes = sum(layout.bucket_bytes().values())
+    k = max(1, layout.shard_multiple)
+    # canonical-string comparison: a resolved NamedSharding spec matches
+    # its declared @dp{k} form
+    declared = sc.steady_expected is not None and str(want_spec) == str(
+        sc.steady_spec or TransferSpec.parse("marshal+delta"))
+    expected = sc.steady_expected if declared else derive_steady_motion(
+        tree, mutate, num_shards=k,
+        align_elems=getattr(scheme, "align_elems", 1))
+    shard_devs = scheme._shard_device_order() \
+        if scheme.sharding is not None else None
+    tps = [TreePath.parse(p) for p in mutate]
     out: List[SteadyMeasurement] = []
     for i in range(passes):
-        leaf = np.asarray(tp.resolve(tree))
-        tree = tp.set(tree, leaf + np.ones((), leaf.dtype))
+        for tp in tps:
+            leaf = np.asarray(tp.resolve(tree))
+            tree = tp.set(tree, leaf + np.ones((), leaf.dtype))
         scheme.ledger.reset()
         t0 = time.perf_counter()
         dev = scheme.to_device(tree)
         jax.block_until_ready(dev)
         wall_us = (time.perf_counter() - t0) * 1e6
         led = scheme.ledger
-        motion_ok = (led.h2d_bytes, led.h2d_calls) \
-            == sc.steady_expected.as_tuple() \
+        motion_ok = (led.h2d_bytes, led.h2d_calls) == expected.as_tuple() \
             and led.h2d_bytes + led.skipped_bytes == full_bytes
+        if shard_devs is not None:
+            per_dev_full = full_bytes // len(shard_devs)
+            for s, d in enumerate(shard_devs):
+                key = str(d.id)
+                moved = led.h2d_bytes_by_device.get(key, 0)
+                skipped = led.skipped_bytes_by_device.get(key, 0)
+                # the acceptance equality, exact on EVERY device
+                motion_ok &= moved + skipped == per_dev_full
+                if expected.by_shard is not None:
+                    motion_ok &= (moved,
+                                  led.h2d_calls_by_device.get(key, 0)) \
+                        == expected.by_shard[s]
         ok = all(np.array_equal(np.asarray(a), np.asarray(b))
                  for a, b in zip(jax.tree_util.tree_leaves(dev),
                                  jax.tree_util.tree_leaves(tree)))
-        out.append(SteadyMeasurement(led.h2d_bytes, led.h2d_calls,
-                                     led.skipped_bytes, wall_us, ok,
-                                     motion_ok))
+        out.append(SteadyMeasurement(
+            led.h2d_bytes, led.h2d_calls, led.skipped_bytes, wall_us, ok,
+            motion_ok, spec=str(want_spec),
+            h2d_by_device=dict(led.h2d_bytes_by_device) or None,
+            skipped_by_device=dict(led.skipped_bytes_by_device) or None))
     return out

@@ -31,7 +31,7 @@ from typing import Any, List, Optional
 
 import numpy as np
 
-from repro.core import TreePath
+from repro.core import TransferSpec, TreePath
 
 from .base import Motion, Scenario, register
 
@@ -412,7 +412,9 @@ def sharded_tree(n: int, k: int, seed: int = 13) -> Any:
 def sharded_expected(n: int, k: int) -> dict:
     """Closed-form per-device Motion on a k-device mesh: marshal pads each
     dtype bucket to a multiple of k and ships one contiguous sub-range per
-    (bucket, device); per-leaf schemes split each granule k ways."""
+    (bucket, device); per-leaf schemes split each granule k ways.  A
+    per-device delta transfer's COLD pass ships everything, so its closed
+    form equals marshal's (its steady state is the sharded_delta family)."""
     f32_elems = n + 3 * n                 # already divisible by k (n = 16k·…)
     i32_elems = 4 * k
     marshal_bytes = _F32 * f32_elems + _I32 * i32_elems
@@ -423,7 +425,8 @@ def sharded_expected(n: int, k: int) -> dict:
                 "uvm": Motion(used_bytes, 2),
                 "pointerchain": Motion(used_bytes, 2)}
     per_leaf = Motion(used_bytes, 2 * k, used_bytes // k, 2)
-    return {"marshal": Motion(marshal_bytes, 2 * k, marshal_bytes // k, 2),
+    marshal = Motion(marshal_bytes, 2 * k, marshal_bytes // k, 2)
+    return {"marshal": marshal, "marshal_delta": marshal,
             "uvm": per_leaf, "pointerchain": per_leaf}
 
 
@@ -448,6 +451,87 @@ def _sharded_family(size: str) -> List[Scenario]:
     k = jax.device_count()
     n = (16 if size == "smoke" else 256) * k
     return [sharded_case(n, k)]
+
+
+# ---------------------------------------------------------------------------
+# sharded_delta — per-device incremental transfers (marshal+delta@dp{k})
+# ---------------------------------------------------------------------------
+
+def sharded_delta_tree(n: int, k: int, seed: int = 19) -> Any:
+    """The per-device delta steady state: two hot f32 leaves that mutate
+    every pass, a cold f32 leaf that never does, and a frozen i32 id
+    table.  Dict keys flatten alphabetically, so the f32 bucket is laid
+    out ``cold[2n] | hot.a[n] | hot.b[n]`` — with sizes divisible by the
+    mesh size ``k``, mutating the hot leaves dirties exactly the TRAILING
+    ``ceil(k/2)`` shards of the f32 bucket, the closed form a
+    ``marshal+delta@dp{k}`` transfer must reproduce per device."""
+    rng = np.random.default_rng(seed)
+    return {
+        "hot": {"a": rng.standard_normal(n).astype(np.float32),
+                "b": rng.standard_normal(n).astype(np.float32)},
+        "cold": rng.standard_normal(2 * n).astype(np.float32),
+        "ids": np.arange(4 * k, dtype=np.int32),
+    }
+
+
+def sharded_delta_expected(n: int, k: int) -> dict:
+    """Cold-pass closed forms (Algorithm-2 differential): the f32 bucket is
+    4n elements (hot.a + hot.b + cold), the i32 bucket 4k — both divisible
+    by k, so marshal ships one contiguous sub-range per (bucket, device)."""
+    marshal_bytes = _F32 * 4 * n + _I32 * 4 * k
+    used_bytes = _F32 * (n + 2 * n)       # hot.a + cold
+    if k == 1:
+        return {"marshal": Motion(marshal_bytes, 2),
+                "marshal_delta": Motion(marshal_bytes, 2),
+                "uvm": Motion(used_bytes, 2),
+                "pointerchain": Motion(used_bytes, 2)}
+    per_leaf = Motion(used_bytes, 2 * k, used_bytes // k, 2)
+    marshal = Motion(marshal_bytes, 2 * k, marshal_bytes // k, 2)
+    return {"marshal": marshal, "marshal_delta": marshal,
+            "uvm": per_leaf, "pointerchain": per_leaf}
+
+
+def sharded_delta_steady_expected(n: int, k: int) -> Motion:
+    """Closed-form per-device Motion of ONE steady pass after mutating
+    hot.a and hot.b: the mutated region is elements [2n, 4n) of the
+    4n-element f32 bucket (cold packs first — see the tree docstring),
+    whose per-device shard is 4n/k elements — so exactly the shards
+    overlapping that tail region ship (``ceil(k/2)`` of them, one DMA
+    each, a full shard of bytes), every other (bucket, device) shard is
+    skipped, and the non-uniform split is declared per shard."""
+    if k == 1:
+        return Motion(_F32 * 4 * n, 1)    # the whole f32 bucket, one DMA
+    step = (4 * n) // k                   # f32 shard elements per device
+    first_dirty = (2 * n) // step         # hot region starts at element 2n
+    by_shard = tuple((step * _F32, 1) if s >= first_dirty else (0, 0)
+                     for s in range(k))
+    dirty = k - first_dirty               # == ceil(k/2)
+    return Motion(dirty * step * _F32, dirty, by_shard=by_shard)
+
+
+def sharded_delta_case(n: int, k: int) -> Scenario:
+    used = ("hot.a", "cold")
+    return Scenario(
+        name=f"sharded_delta_n{n}_dev{k}",
+        family="sharded_delta",
+        build=functools.partial(sharded_delta_tree, n, k),
+        used_paths=used,
+        uvm_access=used,
+        expected=sharded_delta_expected(n, k),
+        sharding=data_sharding,
+        num_shards=k,
+        steady_expected=sharded_delta_steady_expected(n, k),
+        steady_spec=TransferSpec("marshal", delta=True, sharding=k),
+        params=dict(n=n, devices=k, mutate_paths=("hot.a", "hot.b")))
+
+
+@register("sharded_delta")
+def _sharded_delta_family(size: str) -> List[Scenario]:
+    import jax
+
+    k = jax.device_count()
+    n = (4 if size == "smoke" else 64) * k
+    return [sharded_delta_case(n, k)]
 
 
 # ---------------------------------------------------------------------------
@@ -480,6 +564,7 @@ def steady_reuse_case(n: int) -> Scenario:
         # steady state: mutating hot.a dirties ONLY the f32 bucket — one DMA
         # carrying that bucket's bytes, everything else proven clean.
         steady_expected=Motion(f32_bucket, 1),
+        steady_spec=TransferSpec("marshal", delta=True),
         params=dict(n=n, mutate_path="hot.a"))
 
 

@@ -15,7 +15,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import MarshalScheme, clear_cache, make_scheme
+from repro.core import MarshalScheme, clear_cache, transfer_scheme
 from repro.scenarios import iter_scenarios, run_scenario, run_steady_scenario
 
 
@@ -46,7 +46,7 @@ def _leaves_equal(a, b):
 
 def test_clean_repeat_ships_nothing():
     tree = _tree()
-    s = make_scheme("marshal_delta")
+    s = transfer_scheme("marshal+delta")
     s.to_device(tree)
     full = sum(s.layout.bucket_bytes().values())
     assert s.ledger.h2d_bytes == full        # cold pass = full marshal
@@ -61,7 +61,7 @@ def test_clean_repeat_ships_nothing():
 
 def test_one_leaf_mutation_ships_only_its_bucket():
     tree = _tree()
-    s = make_scheme("marshal_delta")
+    s = transfer_scheme("marshal+delta")
     s.to_device(tree)
     bb = s.layout.bucket_bytes()
     full = sum(bb.values())
@@ -80,7 +80,7 @@ def test_one_leaf_mutation_ships_only_its_bucket():
 
 def test_in_place_mutation_with_mark_dirty():
     tree = _tree()
-    s = make_scheme("marshal_delta")
+    s = transfer_scheme("marshal+delta")
     s.to_device(tree)
     bb = s.layout.bucket_bytes()
     tree["f32"]["a"][:] = -7.0               # in place: identity unchanged
@@ -97,7 +97,7 @@ def test_in_place_mutation_without_mark_dirty_is_the_documented_stale():
     the §7 contract says in-place mutators MUST mark_dirty.  Verify the
     hazard is real (and therefore that mark_dirty is load-bearing)."""
     tree = _tree()
-    s = make_scheme("marshal_delta")
+    s = transfer_scheme("marshal+delta")
     s.to_device(tree)
     tree["f32"]["a"][:] = -7.0
     s.ledger.reset()
@@ -109,7 +109,7 @@ def test_in_place_mutation_without_mark_dirty_is_the_documented_stale():
 
 def test_bump_version_forces_reship():
     tree = _tree()
-    s = make_scheme("marshal_delta")
+    s = transfer_scheme("marshal+delta")
     s.to_device(tree)
     bb = s.layout.bucket_bytes()
     s._entry.bump_version("float32")
@@ -123,7 +123,7 @@ def test_double_buffer_preserves_previous_device_tree():
     so device values from the previous pass keep their bytes even though
     the transfer no longer blocks before returning."""
     tree = _tree(seed=1)
-    s = make_scheme("marshal_delta")
+    s = transfer_scheme("marshal+delta")
     dev1 = s.to_device(tree)
     t2 = jax.tree_util.tree_map(
         lambda x: np.asarray(x) + np.ones((), np.asarray(x).dtype), tree)
@@ -141,9 +141,9 @@ def test_delta_schemes_do_not_share_shipped_state():
     """Entries are global, but WHAT a scheme already shipped is per scheme
     instance: a fresh scheme's first pass is always a full (cold) ship."""
     tree = _tree()
-    a = make_scheme("marshal_delta")
+    a = transfer_scheme("marshal+delta")
     a.to_device(tree)
-    b = make_scheme("marshal_delta")
+    b = transfer_scheme("marshal+delta")
     b.to_device(tree)
     full = sum(b.layout.bucket_bytes().values())
     assert b.ledger.h2d_bytes == full
@@ -157,7 +157,7 @@ class _StaleFingerprintDelta(MarshalScheme):
     bucket is clean and ships stale device buffers."""
 
     def __init__(self):
-        super().__init__(delta=True)
+        super().__init__("marshal+delta")
 
     def _entry_for(self, tree):
         entry = super()._entry_for(tree)
@@ -182,7 +182,7 @@ def test_stale_fingerprint_fails_algorithm2_check():
     an honest delta scheme passes twice on mutated trees, the lying one
     passes its warm-up and FAILS once the data changes under it."""
     sc = next(s for s in iter_scenarios("smoke") if s.family == "mixed_dtype")
-    honest = make_scheme("marshal_delta")
+    honest = transfer_scheme("marshal+delta")
     assert run_scenario(sc, scheme=honest).ok
     assert run_scenario(sc, scheme=honest).ok
     liar = _StaleFingerprintDelta()

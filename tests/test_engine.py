@@ -5,10 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (MarshalScheme, PointerChainScheme, UVMScheme,
-                        cache_stats, cached_plan, clear_cache, get_entry,
-                        pack, pack_traced, plan, repack_traced, tree_bytes,
-                        unpack, unpack_traced)
+from repro.core import (MarshalScheme, PointerChainScheme, TransferSession,
+                        UVMScheme, cache_stats, cached_plan, clear_cache,
+                        get_entry, pack, pack_traced, plan, repack_traced,
+                        transfer_scheme, tree_bytes, unpack, unpack_traced)
 from repro.core import engine as engine_lib
 
 
@@ -73,50 +73,97 @@ def test_staging_buffers_reused_across_to_device(tree):
     assert entry.pack_host_calls == 4
 
 
-def test_entry_cache_is_lru_bounded(monkeypatch):
-    monkeypatch.setattr(engine_lib, "ENTRY_CACHE_MAX", 2)
+def test_entry_cache_is_lru_bounded():
+    sess = TransferSession(entry_max=2)
     for n in (3, 5, 7):
-        get_entry({"x": jnp.ones(n)})
-    assert len(engine_lib._ENTRY_CACHE) == 2
-    assert cache_stats()["entry_evictions"] == 1
+        sess.get_entry({"x": jnp.ones(n)})
+    stats = sess.cache_stats()
+    assert stats["entry_size"] == 2
+    assert stats["entry_evictions"] == 1
     # evicted entries are simply re-created on next use
-    e = get_entry({"x": jnp.ones(3)})
+    e = sess.get_entry({"x": jnp.ones(3)})
     assert e.layout.bucket_sizes == {"float32": 3}
 
 
-def test_layout_cache_is_lru_bounded(monkeypatch):
+def test_layout_cache_is_lru_bounded():
     """Satellite: the layout cache must not grow without bound either —
     long-running loops over many shapes stay at the configured cap, and
     evictions are reported by cache_stats()."""
-    monkeypatch.setattr(engine_lib, "LAYOUT_CACHE_MAX", 4)
+    sess = TransferSession(layout_max=4)
     for n in range(10):
-        cached_plan({"x": jnp.ones(n + 1)})
-    assert len(engine_lib._LAYOUT_CACHE) == 4
-    stats = cache_stats()
+        sess.cached_plan({"x": jnp.ones(n + 1)})
+    stats = sess.cache_stats()
     assert stats["layout_evictions"] == 6
     assert stats["layout_size"] == 4
     # most-recently-used layouts survived; an evicted one is a fresh miss
-    cached_plan({"x": jnp.ones(10)})
-    assert cache_stats()["hits"] >= 1
-    cached_plan({"x": jnp.ones(1)})
-    assert cache_stats()["misses"] == 11
+    sess.cached_plan({"x": jnp.ones(10)})
+    assert sess.cache_stats()["hits"] >= 1
+    sess.cached_plan({"x": jnp.ones(1)})
+    assert sess.cache_stats()["misses"] == 11
 
 
 def test_set_cache_limits_trims_immediately():
     from repro.core import set_cache_limits
 
-    old_layout, old_entry = (engine_lib.LAYOUT_CACHE_MAX,
-                             engine_lib.ENTRY_CACHE_MAX)
+    sess = engine_lib.get_session()
+    old_layout, old_entry = sess.layout_max, sess.entry_max
     try:
         for n in range(6):
             get_entry({"x": jnp.ones(n + 1)})
         set_cache_limits(layout_max=2, entry_max=2)
-        assert len(engine_lib._LAYOUT_CACHE) == 2
-        assert len(engine_lib._ENTRY_CACHE) == 2
-        assert cache_stats()["entry_evictions"] == 4
+        stats = cache_stats()
+        assert stats["layout_size"] == 2
+        assert stats["entry_size"] == 2
+        assert stats["entry_evictions"] == 4
     finally:
-        engine_lib.LAYOUT_CACHE_MAX = old_layout
-        engine_lib.ENTRY_CACHE_MAX = old_entry
+        sess.layout_max, sess.entry_max = old_layout, old_entry
+
+
+def test_isolated_session_has_its_own_caches(tree):
+    """A dedicated TransferSession shares nothing with the default one:
+    its executors plan/compile into its own caches, and clear() drops its
+    retained state without touching the process session."""
+    sess = TransferSession()
+    s = transfer_scheme("marshal", session=sess)
+    s.to_device(tree)
+    assert sess.cache_stats()["misses"] == 1
+    assert cache_stats()["misses"] == 0          # default session untouched
+    d = transfer_scheme("marshal+delta", session=sess)
+    d.to_device(tree)
+    d.ledger.reset()
+    d.to_device(tree)
+    assert d.ledger.h2d_bytes == 0               # warm in its session
+    sess.clear()
+    d.ledger.reset()
+    d.to_device(tree)                            # retained state dropped
+    assert d.ledger.h2d_bytes == tree_bytes(tree)
+
+
+def test_session_merged_ledger_sums_issued_ledgers(tree):
+    sess = TransferSession()
+    a = transfer_scheme("marshal", session=sess)
+    b = transfer_scheme("pointerchain", session=sess)
+    a.to_device(tree)
+    b.to_device(tree, paths=["sim.box"])
+    merged = sess.merged_ledger()
+    assert merged.h2d_bytes == a.ledger.h2d_bytes + b.ledger.h2d_bytes
+    assert merged.h2d_calls == a.ledger.h2d_calls + b.ledger.h2d_calls
+
+
+def test_shared_state_executors_share_retained_buckets(tree):
+    """from_spec(shared_state=True): executors of the SAME spec share the
+    session's per-spec retained device state — the second one starts warm.
+    (The default keeps per-executor state: a fresh executor is cold.)"""
+    sess = TransferSession()
+    a = transfer_scheme("marshal+delta", session=sess, shared_state=True)
+    a.to_device(tree)
+    b = transfer_scheme("marshal+delta", session=sess, shared_state=True)
+    b.to_device(tree)
+    assert b.ledger.h2d_bytes == 0
+    assert b.ledger.skipped_bytes == tree_bytes(tree)
+    cold = transfer_scheme("marshal+delta", session=sess)
+    cold.to_device(tree)
+    assert cold.ledger.h2d_bytes == tree_bytes(tree)
 
 
 def test_two_schemes_share_engine_state(tree):
@@ -258,7 +305,7 @@ def test_alignment_gaps_stay_zero(tree):
 
 
 def test_marshal_roundtrip_through_engine(tree):
-    s = MarshalScheme(align_elems=64)
+    s = transfer_scheme("marshal+align64")
     dev = s.to_device(tree)
     back = s.from_device(dev, tree)
     for x, y in zip(jax.tree_util.tree_leaves(tree),

@@ -22,15 +22,14 @@ import numpy as np
 import pytest
 
 from repro import scenarios as S
-from repro.core import MarshalScheme, extract, insert, make_scheme
+from repro.core import MarshalScheme, extract, insert, transfer_scheme
 
-SCHEMES = S.SCHEME_NAMES
 _SMOKE = S.iter_scenarios("smoke")
 _IDS = [sc.name for sc in _SMOKE]
-# each scenario declares which schemes apply (sharded scenarios exclude the
-# single-device marshal_delta path)
-_CELLS = [(sc, scheme) for sc in _SMOKE for scheme in sc.scheme_names()]
-_CELL_IDS = [f"{sc.name}-{scheme}" for sc, scheme in _CELLS]
+# each scenario declares the TransferSpecs it runs under; since the spec
+# redesign the axes compose, so sharded scenarios include marshal+delta
+_CELLS = [(sc, spec) for sc in _SMOKE for spec in sc.specs()]
+_CELL_IDS = [f"{sc.name}-{spec}" for sc, spec in _CELLS]
 
 
 @pytest.fixture(scope="module")
@@ -66,13 +65,13 @@ def test_unknown_family_and_preset_raise():
 
 # ------------------------------------------------- differential round-trip
 
-@pytest.mark.parametrize("sc,scheme_name", _CELLS, ids=_CELL_IDS)
-def test_roundtrip_matches_deepcopy_reference(sc, scheme_name, trees):
+@pytest.mark.parametrize("sc,spec", _CELLS, ids=_CELL_IDS)
+def test_roundtrip_matches_deepcopy_reference(sc, spec, trees):
     """stage -> from_device must reproduce the deepcopy of the host tree
     exactly, and the ledger must equal the analytic motion expectation."""
     tree = trees[sc.name]
     ref = copy.deepcopy(tree)
-    scheme = make_scheme(scheme_name)
+    scheme = sc.scheme_for(spec)
     dev, _ = scheme.stage(tree, list(sc.used_paths),
                           uvm_access=list(sc.uvm_access)
                           if sc.uvm_access else None)
@@ -82,17 +81,18 @@ def test_roundtrip_matches_deepcopy_reference(sc, scheme_name, trees):
         got, want = np.asarray(got), np.asarray(want)
         assert got.dtype == want.dtype and got.shape == want.shape
         np.testing.assert_array_equal(got, want)
-    derived = S.derive_motion(tree, sc.used_paths, sc.uvm_access, scheme_name)
+    derived = S.derive_motion(tree, sc.used_paths, sc.uvm_access, spec,
+                              num_shards=sc.num_shards)
     assert (scheme.ledger.h2d_bytes, scheme.ledger.h2d_calls) \
         == derived.as_tuple()
 
 
-@pytest.mark.parametrize("sc,scheme_name", _CELLS, ids=_CELL_IDS)
-def test_algorithm2_value_and_motion_checks(sc, scheme_name, trees):
-    m = S.run_scenario(sc, scheme_name, tree=trees[sc.name])
-    assert m.ok, f"Algorithm-2 line-7 check failed for {sc.name}/{scheme_name}"
+@pytest.mark.parametrize("sc,spec", _CELLS, ids=_CELL_IDS)
+def test_algorithm2_value_and_motion_checks(sc, spec, trees):
+    m = S.run_scenario(sc, spec, tree=trees[sc.name])
+    assert m.ok, f"Algorithm-2 line-7 check failed for {sc.name}/{spec}"
     assert m.motion_ok, (
-        f"{sc.name}/{scheme_name}: ledger ({m.h2d_bytes}, {m.h2d_calls}) != "
+        f"{sc.name}/{spec}: ledger ({m.h2d_bytes}, {m.h2d_calls}) != "
         f"analytic expectation {m.expected.as_tuple()}")
 
 
@@ -182,7 +182,8 @@ def test_run_scenario_honors_scheme_alignment(trees):
     forms assume tight packing and must not be used)."""
     sc = next(s for s in _SMOKE if s.family == "dense")
     tree = trees[sc.name]
-    m = S.run_scenario(sc, scheme=MarshalScheme(align_elems=64), tree=tree)
+    m = S.run_scenario(sc, scheme=transfer_scheme("marshal+align64"),
+                       tree=tree)
     assert m.ok and m.motion_ok
     # the padded buckets really are bigger than the tight-packed closed form
     assert m.expected.h2d_bytes > sc.expected_motion("marshal", tree).h2d_bytes

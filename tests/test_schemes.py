@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import (MarshalScheme, PointerChainScheme, UVMScheme,
-                        full_deepcopy, make_scheme, selective_deepcopy,
+                        full_deepcopy, selective_deepcopy, transfer_scheme,
                         tree_bytes, TransferLedger)
 
 
@@ -48,7 +48,7 @@ def test_pointerchain_moves_only_declared_chains(tree):
 
 def test_roundtrip_all_schemes(tree):
     for name in ("uvm", "marshal", "pointerchain"):
-        s = make_scheme(name)
+        s = transfer_scheme(name)
         if name == "pointerchain":
             dev = s.to_device(tree, paths=["sim.atoms.traits.pos", "sim.box"])
         else:

@@ -13,9 +13,8 @@ import numpy as np
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import (MarshalScheme, PointerChainScheme, clear_cache,
-                        declare, full_deepcopy, plan, resolve_shards,
-                        shard_ranges)
+from repro.core import (TransferSpec, clear_cache, declare, full_deepcopy,
+                        plan, resolve_shards, shard_ranges, transfer_scheme)
 from repro.scenarios import (derive_motion, iter_scenarios, motion_matches,
                              run_scenario)
 
@@ -47,7 +46,7 @@ def tree():
 
 def test_sharded_marshal_roundtrip_matches_deepcopy(sharding, tree):
     ref = copy.deepcopy(tree)
-    s = MarshalScheme(sharding=sharding)
+    s = transfer_scheme(TransferSpec("marshal", sharding=sharding))
     dev = s.to_device(tree)
     for k in tree:
         np.testing.assert_array_equal(np.asarray(dev[k]), ref[k])
@@ -57,7 +56,7 @@ def test_sharded_marshal_roundtrip_matches_deepcopy(sharding, tree):
 
 
 def test_sharded_marshal_per_device_ledger_exact(sharding, tree):
-    s = MarshalScheme(sharding=sharding)
+    s = transfer_scheme(TransferSpec("marshal", sharding=sharding))
     s.to_device(tree)
     layout = s.layout
     total = sum(layout.bucket_bytes().values())
@@ -72,7 +71,7 @@ def test_sharded_marshal_per_device_ledger_exact(sharding, tree):
 def test_sharded_bucket_placement(sharding, tree):
     """Each device holds exactly its contiguous sub-range of every bucket —
     the per-device arena, not a replicated copy."""
-    s = MarshalScheme(sharding=sharding)
+    s = transfer_scheme(TransferSpec("marshal", sharding=sharding))
     s.to_device(tree)
     entry = s._entry
     bufs = s._put_sharded(entry.staging)
@@ -88,15 +87,15 @@ def test_sharded_matches_full_deepcopy_differential(sharding, tree):
     """Mesh-aware differential (ROADMAP item): the sharded arena transfer
     and ``full_deepcopy(sharding=...)`` must agree leaf-for-leaf."""
     ref = full_deepcopy(copy.deepcopy(tree), sharding=sharding)
-    s = MarshalScheme(sharding=sharding)
+    s = transfer_scheme(TransferSpec("marshal", sharding=sharding))
     dev = s.to_device(tree)
     for k in tree:
         np.testing.assert_array_equal(np.asarray(dev[k]), np.asarray(ref[k]))
 
 
 def test_sharded_and_unsharded_entries_are_distinct_cache_points(tree, sharding):
-    a = MarshalScheme()
-    b = MarshalScheme(sharding=sharding)
+    a = transfer_scheme("marshal")
+    b = transfer_scheme(TransferSpec("marshal", sharding=sharding))
     a.to_device(tree)
     b.to_device(tree)
     if K > 1:
@@ -109,7 +108,7 @@ def test_sharded_and_unsharded_entries_are_distinct_cache_points(tree, sharding)
 # ------------------------------------------------------- pointerchain sharded
 
 def test_sharded_pointerchain_moves_declared_chains_per_device(sharding, tree):
-    s = PointerChainScheme(sharding=sharding)
+    s = transfer_scheme(TransferSpec("pointerchain", sharding=sharding))
     dev = s.to_device(tree, paths=["w", "v"])
     np.testing.assert_array_equal(np.asarray(dev["w"]), tree["w"])
     assert dev["ids"] is tree["ids"]        # undeclared: never left the host
@@ -158,22 +157,29 @@ def test_sharded_scenario_closed_form_matches_structural_and_ledger():
     assert sc.num_shards == K
     tree = sc.build()
     sc.validate(tree)
-    for name in sc.scheme_names():
-        closed = sc.expected_motion(name, tree)
-        derived = derive_motion(tree, sc.used_paths, sc.uvm_access, name,
+    for spec in sc.specs():
+        closed = sc.expected_motion(spec, tree)
+        derived = derive_motion(tree, sc.used_paths, sc.uvm_access, spec,
                                 num_shards=K)
-        assert closed == derived, (name, closed, derived)
-        m = run_scenario(sc, name, tree=tree)
-        assert m.ok and m.motion_ok, (name, m)
+        assert closed == derived, (str(spec), closed, derived)
+        m = run_scenario(sc, spec, tree=tree)
+        assert m.ok and m.motion_ok, (str(spec), m)
         if K > 1:
             assert m.per_device is not None
             assert set(m.per_device.values()) == \
                 {(closed.per_device_bytes, closed.per_device_calls)}
 
 
-def test_sharded_scenario_excludes_delta():
+def test_sharded_scenarios_include_delta():
+    """The spec redesign removed the delta x sharding exclusivity: sharded
+    scenarios now run marshal+delta too (its cold pass has marshal's exact
+    motion; the steady state is tests/test_sharded_delta.py)."""
     sc = next(s for s in iter_scenarios("smoke") if s.family == "sharded")
-    assert "marshal_delta" not in sc.scheme_names()
-    assert MarshalScheme(delta=True).name == "marshal_delta"
-    with pytest.raises(ValueError):
-        MarshalScheme(delta=True, sharding=sc.sharding())
+    delta_specs = [s for s in sc.specs() if s.delta]
+    assert len(delta_specs) == 1 and delta_specs[0].num_shards == K
+    s = transfer_scheme(TransferSpec("marshal", delta=True,
+                                     sharding=sc.sharding()))
+    s.to_device(sc.build())
+    total = sum(s.layout.bucket_bytes().values())
+    assert s.ledger.h2d_bytes == total
+    assert s.ledger.h2d_calls == len(s.layout.bucket_sizes) * K

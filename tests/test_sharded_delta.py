@@ -1,0 +1,194 @@
+"""Per-device delta transfers (marshal+delta@dp{k}) — the composition the
+pre-spec API refused ("cannot be combined yet").
+
+Runs at whatever host device count the process was started with (the CI
+multi-device job forces 8 via XLA_FLAGS); every assertion is written
+against ``jax.device_count()``, so the same tests exercise the 1-device
+degenerate case locally and the real 8-way split in CI.
+
+The acceptance contract (ISSUE 4):
+  * on the steady_reuse mutate-one-leaf preset under ``marshal+delta@dp8``,
+    EVERY device d satisfies the exact equality
+    ``h2d_bytes_by_device[d] + skipped_bytes_by_device[d] ==
+    full sharded marshal bytes[d]``;
+  * a cached clean pass moves 0 bytes (and skips everything, per device);
+  * the sharded_delta family's closed-form per-device Motion ==
+    the structural ``derive_steady_motion`` == the observed ledger,
+    through the Algorithm-2 differential harness (line-7 value check on
+    the mutated steady state included).
+"""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import TransferSpec, clear_cache, transfer_scheme
+from repro.scenarios import (derive_steady_motion, iter_scenarios,
+                             run_algorithm2, run_scenario,
+                             run_steady_scenario)
+
+K = jax.device_count()
+SPEC = TransferSpec("marshal", delta=True, sharding=K)
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    clear_cache()
+    yield
+    clear_cache()
+
+
+def _steady_reuse():
+    return next(s for s in iter_scenarios("smoke")
+                if s.family == "steady_reuse")
+
+
+def _sharded_delta():
+    return next(s for s in iter_scenarios("smoke")
+                if s.family == "sharded_delta")
+
+
+def _per_device_full(scheme):
+    full = sum(scheme.layout.bucket_bytes().values())
+    return full, full // K
+
+
+# -------------------------------------------- the acceptance equalities
+
+def test_steady_reuse_per_device_equality_and_clean_pass():
+    """steady_reuse under marshal+delta@dp{K}: the cached clean pass moves
+    0 bytes, and every steady pass satisfies the per-device complement
+    exactly on every device of the mesh."""
+    sc = _steady_reuse()
+    tree = sc.build()
+    scheme = sc.scheme_for(SPEC)
+    scheme.to_device(tree)                        # cold: full sharded ship
+    full, per_dev = _per_device_full(scheme)
+    assert scheme.ledger.h2d_bytes == full
+    devices = scheme._shard_device_order() if scheme.sharding is not None \
+        else [scheme.device]
+    # cached CLEAN pass: zero motion, all bytes proven clean per device
+    scheme.ledger.reset()
+    dev = scheme.to_device(tree)
+    jax.block_until_ready(dev)
+    assert (scheme.ledger.h2d_bytes, scheme.ledger.h2d_calls) == (0, 0)
+    assert scheme.ledger.skipped_bytes == full
+    for d in devices:
+        key = str(d.id)
+        assert scheme.ledger.h2d_bytes_by_device.get(key, 0) == 0
+        assert scheme.ledger.skipped_bytes_by_device[key] == full // len(devices)
+    # steady passes through the harness: mutate-one-leaf, exact per device
+    for m in run_steady_scenario(sc, passes=3, spec=SPEC):
+        assert m.ok and m.motion_ok, m
+        for d in devices:
+            key = str(d.id)
+            moved = (m.h2d_by_device or {}).get(key, 0)
+            skipped = (m.skipped_by_device or {}).get(key, 0)
+            assert moved + skipped == full // len(devices), (key, m)
+
+
+def test_sharded_delta_closed_form_matches_derivation_and_ledger():
+    """Three-way steady differential: family closed form == structural
+    derive_steady_motion == observed per-device ledger."""
+    sc = _sharded_delta()
+    tree = sc.build()
+    sc.validate(tree)
+    derived = derive_steady_motion(tree, sc.params["mutate_paths"],
+                                   num_shards=sc.num_shards)
+    assert derived == sc.steady_expected, (derived, sc.steady_expected)
+    for m in run_steady_scenario(sc, passes=3):
+        assert m.ok and m.motion_ok, m
+        assert (m.h2d_bytes, m.h2d_calls) == sc.steady_expected.as_tuple()
+
+
+def test_sharded_delta_algorithm2_differential_on_steady_state():
+    """The Algorithm-2 harness (line-7 value check included) over the WARM
+    per-device delta executor: the pass after a mutation must move exactly
+    the derived dirty-shard motion and still scale/verify correctly."""
+    sc = _sharded_delta()
+    tree = sc.build()
+    scheme = sc.scheme_for(sc.steady_spec)
+    # cold pass through the full harness: motion == the scenario's closed
+    # form for a cold marshal+delta@dp{k} transfer
+    m = run_scenario(sc, scheme=scheme, tree=tree)
+    assert m.ok and m.motion_ok, m
+    # mutate the hot leaves, rerun the SAME executor through Algorithm 2
+    t2 = copy.deepcopy(tree)
+    for p in sc.params["mutate_paths"]:
+        from repro.core import TreePath
+        tp = TreePath.parse(p)
+        leaf = np.asarray(tp.resolve(t2))
+        t2 = tp.set(t2, leaf + np.ones((), leaf.dtype))
+    m2 = run_algorithm2(t2, list(sc.used_paths), scheme=scheme,
+                        uvm_access=list(sc.uvm_access) if sc.uvm_access
+                        else None)
+    assert m2.ok, "line-7 check failed on the steady per-device delta pass"
+    steady = derive_steady_motion(t2, sc.params["mutate_paths"],
+                                  num_shards=sc.num_shards)
+    assert (m2.h2d_bytes, m2.h2d_calls) == steady.as_tuple()
+
+
+def test_cold_pass_equals_plain_sharded_marshal():
+    """A fresh per-device delta executor's first pass is byte- and
+    DMA-identical to plain sharded marshal (per device too)."""
+    sc = _sharded_delta()
+    tree = sc.build()
+    plain = sc.scheme_for(TransferSpec("marshal", sharding=K))
+    delta = sc.scheme_for(SPEC)
+    plain.to_device(tree)
+    delta.to_device(tree)
+    assert plain.ledger.per_device() == delta.ledger.per_device()
+    assert (plain.ledger.h2d_bytes, plain.ledger.h2d_calls) == \
+        (delta.ledger.h2d_bytes, delta.ledger.h2d_calls)
+
+
+def test_partial_bucket_mutation_ships_only_overlapped_shards():
+    """Mutating ONE leaf that covers part of a bucket re-ships only the
+    shards its element range overlaps — the per-(bucket, device)
+    granularity that bucket-level tracking cannot express."""
+    if K == 1:
+        pytest.skip("needs >1 device for sub-bucket shard granularity")
+    n = 8 * K
+    rng = np.random.default_rng(3)
+    # alphabetical pytree order: a_hot | b_cold — the hot leaf is the
+    # FIRST quarter of the f32 bucket, so exactly ceil(K/4) shards dirty
+    tree = {"a_hot": rng.standard_normal(n).astype(np.float32),
+            "b_cold": rng.standard_normal(3 * n).astype(np.float32)}
+    scheme = transfer_scheme(SPEC)
+    scheme.to_device(tree)
+    step = scheme.layout.bucket_sizes["float32"] // K
+    dirty = -(-n // step)                 # == ceil(K/4)
+    assert dirty < K                      # genuinely sub-bucket
+    t2 = dict(tree, a_hot=tree["a_hot"] + 1.0)
+    scheme.ledger.reset()
+    dev = scheme.to_device(t2)
+    jax.block_until_ready(dev)
+    assert (scheme.ledger.h2d_bytes, scheme.ledger.h2d_calls) == \
+        (dirty * step * 4, dirty)
+    for a, b in zip(jax.tree_util.tree_leaves(dev),
+                    jax.tree_util.tree_leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_device_trees_survive_buffer_rotation():
+    """The fence + range-disjointness discipline: earlier returned device
+    trees keep their bytes across later rotations of the same buffers."""
+    sc = _sharded_delta()
+    scheme = sc.scheme_for(sc.steady_spec)
+    trees, devs = [sc.build()], []
+    devs.append(scheme.to_device(trees[0]))
+    for i in range(3):
+        t = copy.deepcopy(trees[-1])
+        for p in sc.params["mutate_paths"]:
+            from repro.core import TreePath
+            tp = TreePath.parse(p)
+            leaf = np.asarray(tp.resolve(t))
+            t = tp.set(t, leaf + np.ones((), leaf.dtype))
+        trees.append(t)
+        devs.append(scheme.to_device(t))
+    jax.block_until_ready(devs)
+    for t, d in zip(trees, devs):
+        for a, b in zip(jax.tree_util.tree_leaves(d),
+                        jax.tree_util.tree_leaves(t)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

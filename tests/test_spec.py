@@ -1,0 +1,203 @@
+"""TransferSpec: grammar round-trips, the capability matrix, and the
+session-owned execution state (ISSUE 4 satellite contracts).
+
+  * ``TransferSpec.parse(str(spec)) == spec`` over the ENTIRE valid
+    grammar-expressible matrix (exhaustively here; randomly again in
+    tests/test_spec_properties.py behind importorskip, the repo's
+    hypothesis pattern);
+  * every invalid axis combination raises the one canonical
+    ``UnsupportedSpecError`` — the matrix is validated in ONE place;
+  * specs are frozen, hashable dict keys;
+  * executors built from equal specs have identical policy state.
+"""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (TransferScheme, TransferSpec, UnsupportedSpecError,
+                        clear_cache, transfer_scheme)
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    clear_cache()
+    yield
+    clear_cache()
+
+
+def valid_grammar_specs():
+    """The full grammar-expressible capability matrix (int shardings; a
+    NamedSharding canonicalizes to its @dp{k} form and is covered by the
+    executor tests)."""
+    out = []
+    for kind, delta, staging, sharding, align, device in itertools.product(
+            ("marshal", "pointerchain", "uvm"),
+            (False, True),
+            (None, "blocking", "double_buffered"),
+            (None, 1, 2, 8),
+            (1, 64),
+            (None, 0, 3)):
+        try:
+            out.append(TransferSpec(kind=kind, delta=delta, sharding=sharding,
+                                    align_elems=align, staging=staging,
+                                    device=device))
+        except UnsupportedSpecError:
+            pass
+    # staging=None normalizes to the delta-derived default, so the explicit
+    # point is the SAME spec — dedup to the canonical set
+    return list(dict.fromkeys(out))
+
+
+_VALID = valid_grammar_specs()
+
+
+def test_valid_matrix_is_nontrivial():
+    # marshal spans every axis; uvm/pointerchain keep placement only
+    assert len(_VALID) > 40
+    assert any(s.delta and s.sharding == 8 for s in _VALID)
+
+
+@pytest.mark.parametrize("spec", _VALID, ids=[str(s) for s in _VALID])
+def test_parse_str_roundtrip(spec):
+    assert TransferSpec.parse(str(spec)) == spec
+    # and parse is idempotent / identity on specs
+    assert TransferSpec.parse(spec) is spec
+    assert str(TransferSpec.parse(str(spec))) == str(spec)
+
+
+def test_specs_are_hashable_dict_keys():
+    table = {spec: i for i, spec in enumerate(_VALID)}
+    assert len(table) == len(_VALID)
+    assert table[TransferSpec.parse("marshal+delta@dp8")] == \
+        table[TransferSpec(kind="marshal", delta=True, sharding=8)]
+
+
+def test_legacy_names_parse_as_aliases():
+    assert TransferSpec.parse("marshal_delta") == \
+        TransferSpec.parse("marshal+delta")
+    assert TransferSpec.parse("marshal_delta").name == "marshal_delta"
+    for name in ("uvm", "marshal", "pointerchain"):
+        assert TransferSpec.parse(name).kind == name
+
+
+def test_staging_defaults_follow_delta():
+    assert TransferSpec("marshal").staging == "blocking"
+    assert TransferSpec("marshal", delta=True).staging == "double_buffered"
+    # the explicit default is the same canonical point
+    assert TransferSpec("marshal", delta=True,
+                        staging="double_buffered") == \
+        TransferSpec("marshal", delta=True)
+
+
+@pytest.mark.parametrize("bad", [
+    dict(kind="nope"),
+    dict(kind="uvm", delta=True),
+    dict(kind="pointerchain", delta=True),
+    dict(kind="uvm", align_elems=4),
+    dict(kind="pointerchain", align_elems=64),
+    dict(kind="marshal", align_elems=0),
+    dict(kind="marshal", align_elems=-1),
+    dict(kind="marshal", delta=True, staging="blocking"),
+    dict(kind="uvm", staging="double_buffered"),
+    dict(kind="marshal", staging="double_buffered", sharding=2),
+    dict(kind="marshal", staging="weird"),
+    dict(kind="marshal", sharding=0),
+    dict(kind="marshal", sharding=-2),
+    dict(kind="marshal", sharding="dp8"),
+    dict(kind="marshal", device=-1),
+    dict(kind="marshal", device=0, sharding=2),
+], ids=lambda kw: ",".join(f"{k}={v}" for k, v in kw.items()))
+def test_invalid_combos_raise_the_one_error(bad):
+    with pytest.raises(UnsupportedSpecError):
+        TransferSpec(**bad)
+
+
+@pytest.mark.parametrize("text", [
+    "", "bogus", "marshal+nope", "marshal@qq8", "marshal@dp", "marshal@dp8@dp4",
+    "uvm+delta", "marshal+delta+blocking", "marshal@dev0@dev1",
+    # duplicate/contradictory flags must not silently last-win
+    "marshal+db+blocking", "marshal+blocking+db", "marshal+align4+align8",
+    "marshal+delta+delta",
+])
+def test_unparseable_strings_raise_the_one_error(text):
+    with pytest.raises(UnsupportedSpecError):
+        TransferSpec.parse(text)
+
+
+def test_replace_revalidates():
+    spec = TransferSpec("marshal", delta=True)
+    with pytest.raises(UnsupportedSpecError):
+        spec.replace(kind="uvm")
+    assert spec.replace(sharding=2).num_shards == 2
+
+
+# ------------------------------------------------------------- executors
+
+def test_from_spec_dispatches_on_kind():
+    for text, cls in (("uvm", "UVMScheme"), ("marshal", "MarshalScheme"),
+                      ("marshal+delta", "MarshalScheme"),
+                      ("pointerchain", "PointerChainScheme")):
+        s = TransferScheme.from_spec(text)
+        assert type(s).__name__ == cls
+        assert s.spec == TransferSpec.parse(text)
+        assert str(s.spec) == str(TransferSpec.parse(text))
+
+
+def test_kind_mismatch_raises():
+    from repro.core import UVMScheme
+
+    with pytest.raises(UnsupportedSpecError):
+        UVMScheme("marshal")
+
+
+def test_device_placement_resolves():
+    s = transfer_scheme("marshal@dev0")
+    assert s.device is jax.devices()[0]
+    assert s.spec.device == 0
+
+
+def test_device_index_out_of_range_raises_spec_error():
+    # the spec parses (the index COULD exist), but the executor must fail
+    # with the canonical error, not a bare StopIteration/IndexError
+    with pytest.raises(UnsupportedSpecError, match="device index"):
+        transfer_scheme(f"marshal@dev{jax.device_count() + 7}")
+
+
+def test_named_sharding_canonicalizes_to_dp_string():
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    k = jax.device_count()
+    mesh = jax.make_mesh((k,), ("data",))
+    spec = TransferSpec("marshal", sharding=NamedSharding(mesh,
+                                                          PartitionSpec("data")))
+    assert str(spec) == f"marshal@dp{k}"
+    # the parsed form executes on the default dp mesh of the same size
+    assert TransferSpec.parse(str(spec)).num_shards == spec.num_shards
+
+
+def test_pipelined_staging_matches_blocking_motion_and_values():
+    """marshal+db: same exact ledger motion as blocking marshal, values
+    intact across overlapped rewrites (the fence discipline)."""
+    rng = np.random.default_rng(0)
+    tree = {"a": rng.standard_normal(64).astype(np.float32),
+            "i": np.arange(32, dtype=np.int32)}
+    blocking = transfer_scheme("marshal")
+    pipelined = transfer_scheme("marshal+db")
+    d1 = blocking.to_device(tree)
+    trees, devs = [tree], [pipelined.to_device(tree)]
+    for i in range(3):
+        t = jax.tree_util.tree_map(
+            lambda x: np.asarray(x) + np.ones((), np.asarray(x).dtype),
+            trees[-1])
+        trees.append(t)
+        devs.append(pipelined.to_device(t))
+    jax.block_until_ready((d1, devs))
+    assert pipelined.ledger.h2d_bytes == 4 * blocking.ledger.h2d_bytes
+    assert pipelined.ledger.h2d_calls == 4 * blocking.ledger.h2d_calls
+    assert pipelined.ledger.skipped_bytes == 0       # no delta skip
+    for t, d in zip(trees, devs):
+        for a, b in zip(jax.tree_util.tree_leaves(d),
+                        jax.tree_util.tree_leaves(t)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

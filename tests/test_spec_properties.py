@@ -1,0 +1,52 @@
+"""Hypothesis properties of the TransferSpec grammar.
+
+Separate file behind importorskip (the repo pattern for hypothesis suites,
+see tests/test_arena_properties.py): the exhaustive deterministic matrix
+sweep in tests/test_spec.py must keep running even where hypothesis is
+absent.
+"""
+import pytest
+
+from repro.core import TransferSpec, UnsupportedSpecError
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@st.composite
+def valid_specs(draw):
+    """Random points of the valid, grammar-expressible capability matrix:
+    constraints are applied generatively so every draw constructs."""
+    kind = draw(st.sampled_from(("marshal", "pointerchain", "uvm")))
+    delta = draw(st.booleans()) if kind == "marshal" else False
+    align = draw(st.integers(1, 4096)) if kind == "marshal" else 1
+    sharding = draw(st.one_of(st.none(), st.integers(1, 64)))
+    if kind == "marshal" and not delta and sharding is None:
+        staging = draw(st.sampled_from((None, "blocking", "double_buffered")))
+    else:
+        staging = None
+    device = None if sharding is not None \
+        else draw(st.one_of(st.none(), st.integers(0, 127)))
+    return TransferSpec(kind=kind, delta=delta, sharding=sharding,
+                        align_elems=align, staging=staging, device=device)
+
+
+@settings(max_examples=300, deadline=None)
+@given(valid_specs())
+def test_parse_str_roundtrip(spec):
+    assert TransferSpec.parse(str(spec)) == spec
+
+
+@settings(max_examples=300, deadline=None)
+@given(valid_specs())
+def test_canonical_string_is_stable(spec):
+    assert str(TransferSpec.parse(str(spec))) == str(spec)
+    assert hash(TransferSpec.parse(str(spec))) == hash(spec)
+
+
+@settings(max_examples=200, deadline=None)
+@given(valid_specs(), st.sampled_from(("uvm", "pointerchain")))
+def test_delta_never_validates_off_marshal(spec, kind):
+    if spec.delta:
+        with pytest.raises(UnsupportedSpecError):
+            spec.replace(kind=kind)
