@@ -17,6 +17,10 @@ current-schema rows.
   v3              + spec (the canonical TransferSpec string the row ran
                   under), h2d_bytes_by_device, skipped_bytes_by_device
                   (the first-pass per-device ledger maps), steady_skipped_bytes
+  v4              + policy (the canonical TransferPolicy string for
+                  program rows, "" for plain spec rows), region_ledgers
+                  (region pattern -> per-region first-pass ledger dict),
+                  steady_region_ledgers (same keys, one warm program pass)
 
 The ledger-derived column defaults come from ``TransferLedger().as_dict()``
 rather than a hand-maintained list, so a ledger field added upstream
@@ -29,7 +33,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import TransferLedger
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 # the ledger fields that are persisted per row, with the ledger's own
 # zero-state as their defaults (timings are reported as *_us columns
@@ -60,6 +64,12 @@ V3_DEFAULTS: Dict[str, Any] = {
     "steady_skipped_bytes": None,  # steady x delta: per-pass clean bytes
 }
 
+V4_DEFAULTS: Dict[str, Any] = {
+    "policy": "",              # canonical TransferPolicy string ("" = spec row)
+    "region_ledgers": {},      # region pattern -> cold-pass ledger dict
+    "steady_region_ledgers": {},   # region pattern -> warm-pass ledger dict
+}
+
 
 def upgrade_row(row: Dict[str, Any]) -> Dict[str, Any]:
     """Lift a row of ANY past schema to SCHEMA_VERSION (old rows parse)."""
@@ -68,7 +78,7 @@ def upgrade_row(row: Dict[str, Any]) -> Dict[str, Any]:
         raise ValueError(f"row schema {version} is newer than this reader "
                          f"({SCHEMA_VERSION}); update benchmarks/bench_schema.py")
     out = dict(row)
-    for defaults in (V2_DEFAULTS, V3_DEFAULTS):
+    for defaults in (V2_DEFAULTS, V3_DEFAULTS, V4_DEFAULTS):
         for key, default in defaults.items():
             out.setdefault(key, dict(default) if isinstance(default, dict)
                            else default)
@@ -83,9 +93,13 @@ def load_rows(path: str) -> List[Dict[str, Any]]:
     return [upgrade_row(r) for r in rows]
 
 
-def row_key(row: Dict[str, Any]) -> Tuple[str, str]:
-    """Trajectory identity of a row across PRs."""
-    return (row["scenario"], row["scheme"])
+def row_key(row: Dict[str, Any]) -> Tuple[str, str, str]:
+    """Trajectory identity of a row across PRs.  Policy rows key on the
+    policy string too, so one scenario can carry several program rows (its
+    declared policy plus any ``--policy`` requests) without colliding;
+    plain spec rows keep their historical (scenario, scheme) identity with
+    an empty third component."""
+    return (row["scenario"], row["scheme"], row.get("policy") or "")
 
 
 def compare(old_rows: List[Dict[str, Any]], new_rows: List[Dict[str, Any]],
@@ -103,7 +117,7 @@ def compare(old_rows: List[Dict[str, Any]], new_rows: List[Dict[str, Any]],
         va = a.get(column) if a else None
         vb = b.get(column) if b else None
         ratio = (va / vb) if (va and vb) else None
-        out.append({"scenario": key[0], "scheme": key[1],
+        out.append({"scenario": key[0], "scheme": key[1], "policy": key[2],
                     f"old_{column}": va, f"new_{column}": vb,
                     "speedup": round(ratio, 2) if ratio else None})
     return out

@@ -17,18 +17,23 @@ Sections (paper artifact -> module):
 
 The transfer section iterates the full ``repro.scenarios`` registry and
 writes ``BENCH_transfer.json`` (repo root) in the schema-versioned row
-format of ``benchmarks.bench_schema`` (v3): TransferSpec x scenario x
+format of ``benchmarks.bench_schema`` (v4): TransferSpec x scenario x
 {spec, first_wall_us, cached_wall_us, h2d_bytes, h2d_calls, enqueue_us,
 sync_us, skipped_bytes, delta_calls, sharded, n_devices, per_device_*,
-*_by_device, steady_*} — the machine-readable perf trajectory (compare
-across PRs with ``scripts/update_experiments.py --transfer --old
-prev.json``; old-schema rows still parse).  ``--smoke`` runs ONLY the
-registry sweep at tiny sizes (benchmarks.smoke), including the
-steady-state delta contracts of the steady_reuse/sharded_delta families,
-and fails on any value- or data-motion-check mismatch: the CI
-harness-breakage canary.  ``--spec`` (comma-separated canonical spec
-strings, e.g. ``marshal+delta@dp8``) narrows the smoke and transfer
-sweeps to those specs.
+*_by_device, steady_*} plus one PROGRAM row per scenario policy ({policy,
+region_ledgers, steady_region_ledgers}) — the machine-readable perf
+trajectory (compare across PRs with ``scripts/update_experiments.py
+--transfer --old prev.json``; old-schema rows still parse).  ``--smoke``
+runs ONLY the registry sweep at tiny sizes (benchmarks.smoke), including
+the steady-state delta contracts of the steady_reuse/sharded_delta
+families and every scenario's declared policy program, and fails on any
+value- or data-motion-check mismatch: the CI harness-breakage canary.
+``--spec`` (comma-separated canonical spec strings, e.g.
+``marshal+delta@dp8``) narrows the smoke and transfer sweeps to those
+specs; ``--policy`` (repeatable policy strings, e.g.
+``'params/**=marshal+delta@dp8; **=marshal'``) compiles each into a
+TransferProgram over every scenario tree and enforces the per-region
+ledger contracts.
 """
 from __future__ import annotations
 
@@ -52,17 +57,23 @@ def main(argv=None) -> None:
                     help="comma-separated TransferSpec strings (e.g. "
                          "marshal+delta@dp8) restricting the smoke/transfer "
                          "sweeps; legacy scheme names also parse")
+    ap.add_argument("--policy", action="append", default=[],
+                    help="path-scoped TransferPolicy string (repeatable), "
+                         "e.g. 'params/**=marshal+delta@dp8; **=marshal' — "
+                         "compiled into a TransferProgram over every "
+                         "scenario tree in the smoke/transfer sweeps")
     ap.add_argument("--skip", default="",
                     help="comma-separated section names to skip")
     args = ap.parse_args(argv)
     skip = set(filter(None, args.skip.split(",")))
     specs = list(filter(None, args.spec.split(","))) or None
+    policies = [p for p in args.policy if p.strip()] or None
     t0 = time.time()
 
     if args.smoke:
         _section("scenario registry smoke (all scenarios x all specs)")
         from . import smoke
-        smoke.run(specs=specs)
+        smoke.run(specs=specs, policies=policies)
         print(f"\n[benchmarks.run] done in {time.time() - t0:.1f}s")
         return
 
@@ -98,7 +109,8 @@ def main(argv=None) -> None:
             os.path.abspath(__file__))), "BENCH_transfer.json")
         transfer_steady.run(quick=args.quick,
                             repeats=3 if args.quick else 5,
-                            json_path=json_path, specs=specs)
+                            json_path=json_path, specs=specs,
+                            policies=policies)
 
     if "instructions" not in skip:
         _section("instruction count (Tables 3-4)")

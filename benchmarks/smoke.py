@@ -12,6 +12,13 @@ steady-capable scenario, so the per-device equality
 ``h2d_bytes_by_device[d] + skipped_bytes_by_device[d] == full sharded
 marshal bytes[d]`` is checked on every device even for scenarios that
 declare their own steady state unsharded.
+
+``--policy`` adds path-scoped TransferPolicy programs to the sweep: every
+scenario tree is compiled under each requested policy (every scenario's
+own declared policy runs regardless) and driven cold + warm, with the
+per-region three-way motion check (closed form == structural derivation
+== region ledger), ONE sync per pass, and — for delta regions — the exact
+per-device complement, all enforced as failures.
 """
 from __future__ import annotations
 
@@ -19,8 +26,9 @@ import sys
 import time
 from typing import List, Optional, Sequence
 
-from repro.core import TransferSpec
-from repro.scenarios import iter_scenarios, run_scenario, run_steady_scenario
+from repro.core import TransferPolicy, TransferSpec
+from repro.scenarios import (iter_scenarios, run_policy_scenario,
+                             run_scenario, run_steady_scenario)
 
 
 def _steady_capable(sc) -> bool:
@@ -28,8 +36,11 @@ def _steady_capable(sc) -> bool:
 
 
 def run(out=sys.stdout, size: str = "smoke",
-        specs: Optional[Sequence[str]] = None) -> List[dict]:
+        specs: Optional[Sequence[str]] = None,
+        policies: Optional[Sequence[str]] = None) -> List[dict]:
     requested = [TransferSpec.parse(s) for s in specs] if specs else None
+    req_policies = [TransferPolicy.parse(p) for p in policies] if policies \
+        else []
     rows: List[dict] = []
     failures: List[str] = []
     print("scenario,spec,wall_us,h2d_bytes,h2d_calls,check,motion", file=out)
@@ -37,6 +48,31 @@ def run(out=sys.stdout, size: str = "smoke",
     for sc in iter_scenarios(size):
         tree = sc.build()
         sc.validate(tree)
+        # program passes: the scenario's declared policy + every requested
+        # one (deduped on the canonical string) — cold, then warm
+        # (mutating the steady paths when declared)
+        own = [sc.policy()] if sc.declared_policy else []
+        for pol in {str(p): p for p in own + req_policies}.values():
+            npass = 3 if _steady_capable(sc) else 2
+            for i, m in enumerate(run_policy_scenario(sc, pol, tree=tree,
+                                                      passes=npass)):
+                rows.append(dict(scenario=sc.name, spec=str(pol),
+                                 scheme=f"policy/pass{i}",
+                                 wall_us=round(m.wall_us, 1),
+                                 h2d_bytes=m.h2d_bytes,
+                                 h2d_calls=m.h2d_calls,
+                                 ok=m.ok, motion_ok=m.motion_ok))
+                print(f"{sc.name},policy[{pol}]/pass{i},{m.wall_us:.1f},"
+                      f"{m.h2d_bytes},{m.h2d_calls},"
+                      f"{'ok' if m.ok else 'FAIL'},"
+                      f"{'ok' if m.motion_ok else 'FAIL'}", file=out)
+                if not m.ok:
+                    failures.append(f"{sc.name}/policy[{pol}]/pass{i}: "
+                                    "value check failed")
+                if not m.motion_ok:
+                    failures.append(
+                        f"{sc.name}/policy[{pol}]/pass{i}: per-region "
+                        f"motion broke the ledger contract ({m.regions})")
         for spec in sc.specs():
             if requested is not None and not any(
                     str(spec) == str(r) or spec.name == str(r)

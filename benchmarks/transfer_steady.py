@@ -12,11 +12,15 @@ every spec against the whole host mesh and record the per-device split.
 
 This section measures all of it over the ENTIRE ``repro.scenarios``
 registry — one row per applicable :class:`TransferSpec` x registered
-scenario — and (via ``benchmarks.run``) persists the rows to
+scenario, plus one PROGRAM row per scenario policy (the scenario's
+declared path-scoped ``TransferPolicy`` and any ``--policy`` requests):
+cold + warm ``TransferProgram`` passes with the per-region ledgers
+persisted — and (via ``benchmarks.run``) persists the rows to
 ``BENCH_transfer.json`` in the schema-versioned format of
-``benchmarks.bench_schema`` (v3: rows carry the canonical ``spec`` string
-and the per-device ledger maps) so the perf trajectory stays
-machine-comparable across PRs.
+``benchmarks.bench_schema`` (v4: rows carry the canonical ``spec`` string,
+the per-device ledger maps, and for program rows the ``policy`` string +
+``region_ledgers``/``steady_region_ledgers`` maps) so the perf trajectory
+stays machine-comparable across PRs.
 
 Every row's first-pass ``h2d_bytes``/``h2d_calls`` (and per-device split,
 when sharded) is asserted against the scenario's analytic expectation
@@ -32,9 +36,9 @@ from typing import Any, List, Optional, Sequence
 
 import jax
 
-from repro.core import TransferLedger
+from repro.core import TransferLedger, TransferPolicy
 from repro.scenarios import (Scenario, iter_scenarios, motion_matches,
-                             run_steady_scenario)
+                             run_policy_scenario, run_steady_scenario)
 
 from .bench_schema import LEDGER_COLUMNS, SCHEMA_VERSION, upgrade_row
 
@@ -75,11 +79,78 @@ def _spec_requested(spec, requested: Optional[Sequence[str]]) -> bool:
         or spec.name in requested
 
 
+def _print_row(row: dict, out) -> None:
+    csv = {k: ("" if v is None else v) for k, v in row.items()}
+    csv["spec"] = row["spec"] or row.get("policy", "")
+    print("{scenario},{spec},{first_wall_us},{cached_wall_us},"
+          "{speedup},{h2d_bytes},{h2d_calls},{enqueue_us},{sync_us},"
+          "{skipped_bytes},{steady_wall_us}".format(**csv), file=out)
+
+
+def _ledger_of(row: dict) -> TransferLedger:
+    led = TransferLedger()
+    led.h2d_bytes, led.h2d_calls = row["h2d_bytes"], row["h2d_calls"]
+    return led
+
+
+def _merge_region_dicts(regions: dict) -> dict:
+    """Sum per-region ledger dicts into the row's flat totals."""
+    out = {k: 0 for k in ("h2d_bytes", "h2d_calls", "skipped_bytes",
+                          "delta_calls")}
+    out.update(enqueue_s=0.0, sync_s=0.0, h2d_bytes_by_device={},
+               skipped_bytes_by_device={})
+    for led in regions.values():
+        for k in ("h2d_bytes", "h2d_calls", "skipped_bytes", "delta_calls"):
+            out[k] += led[k]
+        out["enqueue_s"] += led["enqueue_s"]
+        out["sync_s"] += led["sync_s"]
+        for field in ("h2d_bytes_by_device", "skipped_bytes_by_device"):
+            for d, v in led[field].items():
+                out[field][d] = out[field].get(d, 0) + v
+    return out
+
+
+def _policy_row(sc: Scenario, tree: Any, policy: TransferPolicy,
+                repeats: int) -> dict:
+    """One schema-v4 program row: cold + warm TransferProgram passes under
+    ``policy`` with the per-region three-way motion check enforced (closed
+    form == structural derivation == region ledger, see
+    ``run_policy_scenario``)."""
+    ms = run_policy_scenario(sc, policy, tree=tree, passes=1 + repeats)
+    assert all(m.ok and m.motion_ok for m in ms), (
+        f"{sc.name}/{policy}: program pass broke its per-region ledger "
+        f"contract: {[(m.ok, m.motion_ok) for m in ms]}")
+    cold, warm = ms[0], min(ms[1:], key=lambda m: m.wall_us)
+    totals = _merge_region_dicts(cold.regions)
+    row = dict(schema=SCHEMA_VERSION,
+               scenario=sc.name, family=sc.family, scheme="policy",
+               spec="", policy=str(policy),
+               first_wall_us=round(cold.wall_us, 1),
+               cached_wall_us=round(warm.wall_us, 1),
+               speedup=round(cold.wall_us / warm.wall_us, 2),
+               enqueue_us=round(totals.pop("enqueue_s") * 1e6, 1),
+               sync_us=round(totals.pop("sync_s") * 1e6, 1),
+               sharded=policy.num_shards > 1,
+               n_devices=policy.num_shards,
+               per_device_bytes=None, per_device_calls=None,
+               region_ledgers=cold.regions,
+               steady_region_ledgers=warm.regions,
+               steady_wall_us=round(warm.wall_us, 1),
+               steady_h2d_bytes=warm.h2d_bytes,
+               steady_skipped_bytes=warm.skipped_bytes)
+    row.update(totals)
+    return upgrade_row(row)
+
+
 def run(out=sys.stdout, repeats: int = 5, quick: bool = False,
         json_path: Optional[str] = None, size: Optional[str] = None,
-        specs: Optional[Sequence[str]] = None) -> List[dict]:
+        specs: Optional[Sequence[str]] = None,
+        policies: Optional[Sequence[str]] = None) -> List[dict]:
     """``specs`` (canonical spec strings or legacy scheme names) restricts
-    the sweep to matching rows — the ``--spec`` CLI axis."""
+    the sweep to matching rows — the ``--spec`` CLI axis.  ``policies``
+    (path-scoped policy strings, the ``--policy`` CLI axis) add one program
+    row per scenario per policy, ON TOP of each scenario's own declared
+    policy row (``mixed_policy`` family)."""
     size = size or ("quick" if quick else "full")
     rows: List[dict] = []
     suite = TransferLedger()      # every first pass, merged: the suite total
@@ -135,10 +206,17 @@ def run(out=sys.stdout, repeats: int = 5, quick: bool = False,
                 row.update(_steady_columns(sc, spec))
             row = upgrade_row(row)
             rows.append(row)
-            csv = {k: ("" if v is None else v) for k, v in row.items()}
-            print("{scenario},{spec},{first_wall_us},{cached_wall_us},"
-                  "{speedup},{h2d_bytes},{h2d_calls},{enqueue_us},{sync_us},"
-                  "{skipped_bytes},{steady_wall_us}".format(**csv), file=out)
+            _print_row(row, out)
+        # program rows: the scenario's declared policy, plus any requested
+        # (deduped on the canonical policy string)
+        cand = [TransferPolicy.parse(t) for t in
+                ([sc.declared_policy] if sc.declared_policy else [])
+                + list(policies or [])]
+        for pol in {str(p): p for p in cand}.values():
+            row = _policy_row(sc, tree, pol, repeats)
+            suite.merge(_ledger_of(row))
+            rows.append(row)
+            _print_row(row, out)
     print(f"[transfer_steady] suite cold motion: {suite.h2d_bytes} bytes "
           f"in {suite.h2d_calls} DMAs across {len(rows)} rows", file=out)
     if json_path:

@@ -2,18 +2,25 @@
 
     PYTHONPATH=src python examples/deepcopy_demo.py [--k 8 --n 100000]
     PYTHONPATH=src python examples/deepcopy_demo.py --spec marshal+delta
+    PYTHONPATH=src python examples/deepcopy_demo.py \
+        --policy 'params/**=marshal; opt/**=marshal+delta; **=pointerchain'
 
 Runs one Linear-scenario cell and one Dense-scenario cell under the
 paper's three transfer specs (plus any ``--spec`` strings you add, e.g.
 ``marshal+delta`` or ``marshal+delta@dp8`` on a multi-device host),
 printing Algorithm-2 wall time, kernel time and the exact data motion
-each spec issued — the paper's Figures 5-7 at one data point.
+each spec issued — the paper's Figures 5-7 at one data point.  A third
+section runs a model-shaped params/opt/meta tree under a path-scoped
+``--policy`` (one TransferProgram: every region its own spec, one sync),
+next to the same tree under each whole-tree spec — the mixed-policy
+scenario a single spec cannot serve.
 """
 import argparse
 
 from repro.core import PAPER_SPECS, TransferSpec
 from repro.scenarios import (dense_chain, dense_tree, dense_uvm_access_set,
-                             linear_tree, linear_used_paths, run_algorithm2)
+                             linear_tree, linear_used_paths,
+                             mixed_policy_tree, run_algorithm2)
 
 
 def _report(tree, used, specs, access=None):
@@ -35,6 +42,11 @@ def main():
     ap.add_argument("--spec", action="append", default=[],
                     help="extra TransferSpec strings to run alongside the "
                          "paper's three (repeatable)")
+    ap.add_argument("--policy",
+                    default="params/**=marshal; opt/**=marshal+delta; "
+                            "**=pointerchain",
+                    help="path-scoped TransferPolicy for the mixed-state "
+                         "section (region pattern = spec, ';'-separated)")
     args = ap.parse_args()
     specs = list(PAPER_SPECS) + [TransferSpec.parse(s) for s in args.spec]
 
@@ -50,6 +62,18 @@ def main():
     _report(tree, used, specs, access=access)
     print("\n(marshalling moves the whole q^3 tree for one used leaf; "
           "pointerchain moves exactly that leaf — the paper's Fig. 7 gap)")
+
+    n = max(args.n // 100, 8)
+    print(f"\n=== Mixed state: params/opt/meta tree, n={n} ===")
+    tree = mixed_policy_tree(n)
+    used = ["params.w", "opt.m", "meta.scale"]
+    _report(tree, used, specs)
+    m = run_algorithm2(tree, used, policy=args.policy)
+    print(f"  policy program      wall {m.wall_us/1e3:8.2f} ms  "
+          f"H2D {m.h2d_calls:3d} DMAs / {m.h2d_bytes/1e6:8.3f} MB"
+          f"  check={'ok' if m.ok else 'FAIL'}")
+    print(f"  ({m.spec}\n   — each region under its own spec, every "
+          "region's buckets enqueued before ONE sync)")
 
 
 if __name__ == "__main__":

@@ -9,8 +9,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (chain_call, declare, extract, pack, region,
-                        transfer_scheme, tree_bytes, unpack)
+from repro.core import (chain_call, declare, extract, get_session, pack,
+                        region, transfer_scheme, tree_bytes, unpack)
 
 
 def main():
@@ -55,6 +55,19 @@ def main():
         led = scheme.ledger
         print(f"{name:13s} H2D: {led.h2d_calls} transfer(s), "
               f"{led.h2d_bytes/1e3:8.1f} KB")
+
+    # -- path-scoped policy: each region its own spec, ONE program -----------
+    program = get_session().compile(
+        simulation,
+        "atoms/traits/**=marshal+delta; box=pointerchain; **=marshal")
+    dev = program.to_device(simulation)
+    print("\npolicy program regions:")
+    for pat, led in program.ledgers.items():
+        print(f"  {pat:20s} H2D {led.h2d_calls} transfer(s), "
+              f"{led.h2d_bytes/1e3:6.1f} KB")
+    print(f"  ({program.last_stats.enqueue_total} enqueues, "
+          f"{program.last_stats.syncs} sync — a repeat pass re-ships only "
+          "dirty traits buckets)")
 
     # -- marshalling by hand: Algorithm 1 ------------------------------------
     buffers, layout = pack(simulation)

@@ -51,19 +51,34 @@ def roofline_main() -> None:
     print(f"injected {len(rows)} rows")
 
 
+def _region_summary(r: dict) -> str:
+    """Compact per-region column for program rows: cold->steady bytes per
+    region pattern (`` `pat`:cold→steady ``)."""
+    regions = r.get("region_ledgers") or {}
+    if not regions:
+        return ""
+    steady = r.get("steady_region_ledgers") or {}
+    return "; ".join(
+        f"`{pat}`:{led['h2d_bytes']}"
+        + (f"→{steady[pat]['h2d_bytes']}" if pat in steady else "")
+        for pat, led in regions.items())
+
+
 def transfer_main(json_path: str, old_path: str = None) -> None:
     from benchmarks import bench_schema
 
     rows = bench_schema.load_rows(json_path)
-    lines = ["| scenario | spec | cached µs | h2d bytes | calls | "
-             "skipped | devices | steady µs |",
-             "|---|---|---|---|---|---|---|---|"]
+    lines = ["| scenario | spec / policy | cached µs | h2d bytes | calls | "
+             "skipped | devices | steady µs | per-region h2d (cold→steady) |",
+             "|---|---|---|---|---|---|---|---|---|"]
     for r in rows:
         lines.append(
-            f"| {r['scenario']} | {r['spec'] or r['scheme']} | "
+            f"| {r['scenario']} | "
+            f"{r['policy'] or r['spec'] or r['scheme']} | "
             f"{r['cached_wall_us']} | "
             f"{r['h2d_bytes']} | {r['h2d_calls']} | {r['skipped_bytes']} | "
-            f"{r['n_devices']} | {r['steady_wall_us'] or ''} |")
+            f"{r['n_devices']} | {r['steady_wall_us'] or ''} | "
+            f"{_region_summary(r)} |")
     body = (f"### Steady-state transfers (schema "
             f"v{bench_schema.SCHEMA_VERSION}, {len(rows)} rows)\n\n"
             + "\n".join(lines))
@@ -74,7 +89,8 @@ def transfer_main(json_path: str, old_path: str = None) -> None:
                  "| scenario | scheme | old | new | speedup |\n"
                  "|---|---|---|---|---|\n")
         body += "\n".join(
-            f"| {c['scenario']} | {c['scheme']} | "
+            f"| {c['scenario']} | "
+            f"{c['policy'] or c['scheme']} | "
             f"{c['old_cached_wall_us'] or ''} | "
             f"{c['new_cached_wall_us'] or ''} | {c['speedup'] or ''} |"
             for c in cmp_rows)

@@ -17,6 +17,9 @@ from .spec import PAPER_SPECS, TransferSpec, UnsupportedSpecError
 from .schemes import (TransferLedger, TransferScheme, UVMScheme, MarshalScheme,
                       PointerChainScheme, SCHEMES, make_scheme,
                       transfer_scheme)
+from .policy import (PolicyRule, ProgramStats, Region, TransferPolicy,
+                     TransferProgram, UnsupportedPolicyError, compile_program,
+                     partition_tree)
 from .deepcopy import (full_deepcopy, selective_deepcopy, host_skeleton,
                        tree_bytes)
 
@@ -33,5 +36,8 @@ __all__ = [
     "PAPER_SPECS", "TransferSpec", "UnsupportedSpecError",
     "TransferLedger", "TransferScheme", "UVMScheme", "MarshalScheme",
     "PointerChainScheme", "SCHEMES", "make_scheme", "transfer_scheme",
+    "PolicyRule", "ProgramStats", "Region", "TransferPolicy",
+    "TransferProgram", "UnsupportedPolicyError", "compile_program",
+    "partition_tree",
     "full_deepcopy", "selective_deepcopy", "host_skeleton", "tree_bytes",
 ]

@@ -9,6 +9,7 @@ is the multi-chip deep copy).
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Optional, Sequence, Union
 
 import jax
@@ -16,17 +17,64 @@ import numpy as np
 
 from .chainref import declare, extract, insert
 from .schemes import TransferLedger
-from .treepath import TreePath
+from .treepath import TreePath, leaf_paths
 
 
 def _nbytes(x: Any) -> int:
     return int(np.asarray(x).nbytes) if not hasattr(x, "nbytes") else int(x.nbytes)
 
 
+@functools.lru_cache(maxsize=None)
+def _dp_sharding(k: int):
+    from .schemes import _default_dp_sharding
+
+    return _default_dp_sharding(k)
+
+
+def _policy_target(spec: Any, leaf: Any) -> Any:
+    if spec.num_shards > 1:
+        sh = _dp_sharding(spec.num_shards)
+        shape = np.shape(leaf)
+        if shape and shape[0] % spec.num_shards == 0:
+            return sh
+        # leaves the 1-D split cannot divide (scalars, ragged dims) are
+        # replicated over the same mesh — the arena engine absorbs them
+        # via bucket tail-padding instead
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        return NamedSharding(sh.mesh, PartitionSpec())
+    return jax.devices()[spec.device or 0]
+
+
 def full_deepcopy(tree: Any, device: Optional[Any] = None,
                   sharding: Optional[Any] = None,
-                  ledger: Optional[TransferLedger] = None) -> Any:
-    """Replicate the whole structure on the device (full deep copy)."""
+                  ledger: Optional[TransferLedger] = None,
+                  policy: Optional[Any] = None) -> Any:
+    """Replicate the whole structure on the device (full deep copy).
+
+    ``policy`` (a path-scoped :class:`~repro.core.policy.TransferPolicy` or
+    policy string) places each leaf on ITS region's target — the sharded
+    mesh of an ``@dp{k}`` rule, the device of an ``@dev{i}`` rule, device 0
+    otherwise — one naive ``device_put`` per leaf.  This is the reference
+    the mixed-policy differential tests compare a compiled
+    ``TransferProgram``'s values and placement against: same result, none
+    of the engine's staging/batching/delta machinery.
+    """
+    if policy is not None:
+        from .policy import TransferPolicy
+
+        if device is not None or sharding is not None:
+            raise ValueError("policy placement is exclusive with the "
+                             "device/sharding arguments")
+        policy = TransferPolicy.parse(policy)
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        out = []
+        for path, leaf in zip(leaf_paths(tree), leaves):
+            if ledger is not None:
+                ledger.record_h2d(_nbytes(leaf))
+            out.append(jax.device_put(
+                leaf, _policy_target(policy.match(path).spec, leaf)))
+        return jax.tree_util.tree_unflatten(treedef, out)
     target = sharding if sharding is not None else (device or jax.devices()[0])
 
     def put(leaf):

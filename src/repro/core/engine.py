@@ -148,6 +148,11 @@ class TransferSession:
         self._spec_states: Dict[Any, DeltaState] = {}
         self._delta_states: "weakref.WeakSet[DeltaState]" = weakref.WeakSet()
         self._ledgers: List["weakref.ref"] = []
+        # compiled TransferPrograms (weak: dropped with their owner);
+        # clear() must walk them too — a program's region executors hold
+        # strong entry refs that would otherwise keep staging buffers,
+        # fences and retained device buckets alive past the cache flush.
+        self._programs: "weakref.WeakSet" = weakref.WeakSet()
 
     # -- plans & entries -----------------------------------------------------
     def cached_plan(self, tree: Any, align_elems: int = 1,
@@ -223,6 +228,16 @@ class TransferSession:
         out = dict(self._stats)
         out["layout_size"] = len(self._layouts)
         out["entry_size"] = len(self._entries)
+        out["programs"] = len(self._programs)
+        # every device bucket (or bucket shard) a delta state of this
+        # session still retains — MUST report 0 after clear()
+        retained = 0
+        for state in list(self._delta_states):
+            for per_entry in state.retained.values():
+                for val in per_entry.values():
+                    retained += sum(1 for x in val if x is not None) \
+                        if isinstance(val, list) else 1
+        out["retained_device_buckets"] = retained
         return out
 
     # -- delta state ---------------------------------------------------------
@@ -264,13 +279,32 @@ class TransferSession:
                     if (led := r()) is not None])
         return out
 
+    # -- compiled programs ---------------------------------------------------
+    def compile(self, tree: Any, policy: Any) -> Any:
+        """Compile a path-scoped :class:`~repro.core.policy.TransferPolicy`
+        against ``tree``'s treedef into a
+        :class:`~repro.core.policy.TransferProgram`: the treedef partitioned
+        into regions (every leaf covered exactly once), one executor per
+        region over THIS session's caches, all regions' buckets enqueued
+        before one sync per pass.  The session tracks the program so
+        :meth:`clear` releases its retained device state too."""
+        from .policy import compile_program
+
+        program = compile_program(tree, policy, self)
+        self._programs.add(program)
+        return program
+
     # -- lifecycle -----------------------------------------------------------
     def clear(self) -> None:
-        """Drop cached layouts/entries, every retained device bucket, and
-        the stats counters.  Live schemes keep working (cold)."""
+        """Drop cached layouts/entries, every retained device bucket —
+        including the per-region delta states and entry references of
+        compiled programs — and the stats counters.  Live schemes and
+        programs keep working (cold)."""
         self._layouts.clear()
         self._entries.clear()
         self._spec_states.clear()
+        for program in list(self._programs):
+            program.clear()
         for state in list(self._delta_states):
             state.clear()
         for k in self._stats:

@@ -1,0 +1,493 @@
+"""Path-scoped transfer policies — per-subtree specs compiled into ONE program.
+
+The paper's ``pointerchain`` directive names *specific pointer chains* and
+treats each region of the nested structure differently; a single
+:class:`~repro.core.spec.TransferSpec` applied to the whole tree is exactly
+what the directive model forbids.  Following the directive-based porting
+surveyed in ESCAPE D2.2 and LLAMA's separation of memory layout from access
+expression, a **policy tree** maps tree-path regions to specs:
+
+  * :class:`PolicyRule`     — a frozen (path pattern, TransferSpec) pair.
+  * :class:`TransferPolicy` — an ordered rule set with a required default
+    (``**``) rule; the most specific matching pattern wins per leaf.
+  * :class:`TransferProgram`— the compiled artifact
+    (``TransferSession.compile(tree, policy)``): the treedef partitioned
+    into regions (every leaf covered exactly once), one thin scheme
+    executor per region reusing the session's cached layouts/entries, and
+    a ``to_device`` pass that enqueues ALL regions' buckets before ONE
+    sync.
+
+Pattern grammar (extends the spec grammar of DESIGN.md §8.1)::
+
+    policy  := rule (';' rule)*
+    rule    := pattern '=' spec
+    pattern := '**' | part ('/' part)* ('/**')?
+    part    := name index* | '[' INT ']' | '*'
+
+``*`` matches exactly one path step, a trailing ``**`` matches any
+remaining suffix (including none), and ``kids[2]`` is the two steps
+``kids`` then ``[2]`` — the same tokens a :class:`TreePath` prints.  E.g.::
+
+    params/**=marshal@dp8; opt/**=marshal+delta; **=pointerchain
+
+``str``/``parse`` round-trip exactly; a bare spec string (no ``=``) parses
+as the one-rule policy ``**=<spec>``.  The capability matrix is validated
+ONCE at construction: every per-rule spec goes through
+``TransferSpec.parse`` and policy-level conflicts (duplicate patterns,
+missing default rule, sharded rules that disagree on the mesh size —
+overlapping shard axes) raise :class:`UnsupportedPolicyError`.
+
+Matching (most-specific wins): among the rules whose pattern matches a
+leaf path, pick the longest fixed prefix, then the most literal (non-``*``)
+steps, then an exact pattern over a ``**`` one; remaining ties go to
+declaration order.  Partitioning depends only on the treedef's paths, so
+treedef-equal trees always partition identically.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+import jax
+
+from .spec import TransferSpec, UnsupportedSpecError
+from .treepath import TreePath, leaf_paths, _parse as _parse_steps
+
+
+class UnsupportedPolicyError(UnsupportedSpecError):
+    """The canonical error for any invalid policy: unparseable rule text,
+    a rule spec off the capability matrix, or a policy-level conflict
+    (duplicate patterns, missing ``**`` default, overlapping shard axes)."""
+
+
+# ---------------------------------------------------------------------------
+# patterns
+# ---------------------------------------------------------------------------
+
+def _pattern_parse(pattern: str) -> Tuple[Tuple[Any, ...], bool]:
+    """``pattern`` -> (fixed steps, has trailing globstar).  Steps are the
+    TreePath step types (str | int) plus the literal single-step wildcard
+    ``"*"``."""
+    text = pattern.strip()
+    if not text:
+        raise UnsupportedPolicyError("empty path pattern")
+    parts = text.split("/")
+    globstar = parts[-1] == "**"
+    if globstar:
+        parts = parts[:-1]
+    steps: List[Any] = []
+    for part in parts:
+        if part == "**":
+            raise UnsupportedPolicyError(
+                f"cannot parse pattern {pattern!r}: '**' is only allowed as "
+                "the trailing part")
+        if part == "*":
+            steps.append("*")
+            continue
+        if not part:
+            raise UnsupportedPolicyError(
+                f"cannot parse pattern {pattern!r}: empty step")
+        try:
+            steps.extend(_parse_steps(part))
+        except ValueError as e:
+            raise UnsupportedPolicyError(
+                f"cannot parse pattern {pattern!r}: {e}") from None
+    if not steps and not globstar:
+        raise UnsupportedPolicyError(
+            f"cannot parse pattern {pattern!r}: no steps")
+    return tuple(steps), globstar
+
+
+def _pattern_str(steps: Tuple[Any, ...], globstar: bool) -> str:
+    """Canonical string form: int steps print attached (``kids[2]``), the
+    inverse of :func:`_pattern_parse`."""
+    out: List[str] = []
+    for step in steps:
+        if isinstance(step, int):
+            if out:
+                out[-1] += f"[{step}]"
+            else:
+                out.append(f"[{step}]")
+        else:
+            out.append(step)
+    if globstar:
+        out.append("**")
+    return "/".join(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyRule:
+    """One (path pattern -> TransferSpec) point of a policy tree.  Frozen
+    and hashable; the pattern is canonicalized so equal rules compare equal
+    regardless of spelling (``"opt/m"`` == ``"opt/m"``; specs normalize via
+    ``TransferSpec.parse``)."""
+
+    pattern: str
+    spec: TransferSpec
+
+    def __post_init__(self):
+        steps, globstar = _pattern_parse(self.pattern)
+        object.__setattr__(self, "pattern", _pattern_str(steps, globstar))
+        object.__setattr__(self, "spec", TransferSpec.parse(self.spec))
+        # parsed once here; eq/hash stay on the declared (canonical) fields.
+        # partition_tree matches every (leaf, rule) pair, so per-call
+        # re-parsing would dominate policy resolution on big state trees.
+        object.__setattr__(self, "_steps", steps)
+        object.__setattr__(self, "_globstar", globstar)
+        object.__setattr__(
+            self, "_specificity",
+            (len(steps), sum(1 for s in steps if s != "*"),
+             0 if globstar else 1))
+
+    # -- matching ------------------------------------------------------------
+    def _parts(self) -> Tuple[Tuple[Any, ...], bool]:
+        return self._steps, self._globstar
+
+    def _match_steps(self, got: Tuple[Any, ...]) -> bool:
+        steps = self._steps
+        if (len(got) < len(steps)) if self._globstar \
+                else (len(got) != len(steps)):
+            return False
+        return all(p == "*" or p == s for p, s in zip(steps, got))
+
+    def matches(self, path: Union[str, TreePath]) -> bool:
+        return self._match_steps(TreePath.parse(path).steps)
+
+    def specificity(self) -> Tuple[int, int, int]:
+        """(fixed prefix length, literal steps, exactness) — compared
+        lexicographically, larger wins; declaration order breaks ties."""
+        return self._specificity
+
+    def __str__(self) -> str:
+        return f"{self.pattern}={self.spec}"
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferPolicy:
+    """An ordered rule set over tree-path regions.  Validated once at
+    construction; hashable, so a policy is a cache key like a spec."""
+
+    rules: Tuple[PolicyRule, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules", tuple(self.rules))
+        if not self.rules:
+            raise UnsupportedPolicyError("a policy needs at least one rule")
+        seen: Dict[str, PolicyRule] = {}
+        for rule in self.rules:
+            if not isinstance(rule, PolicyRule):
+                raise UnsupportedPolicyError(
+                    f"rules must be PolicyRule instances, got {rule!r}")
+            if rule.pattern in seen:
+                raise UnsupportedPolicyError(
+                    f"duplicate pattern {rule.pattern!r} in policy")
+            seen[rule.pattern] = rule
+        if "**" not in seen:
+            raise UnsupportedPolicyError(
+                "a policy requires a default rule ('**=<spec>') so every "
+                "leaf is covered")
+        shard_sizes = {r.spec.num_shards for r in self.rules
+                       if r.spec.num_shards > 1}
+        if len(shard_sizes) > 1:
+            raise UnsupportedPolicyError(
+                f"overlapping shard axes: sharded rules must agree on the "
+                f"mesh size, got {sorted(shard_sizes)}")
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def of(cls, spec: Union[str, TransferSpec]) -> "TransferPolicy":
+        """The one-rule policy a whole-tree spec becomes (``**=<spec>``)."""
+        return cls((PolicyRule("**", TransferSpec.parse(spec)),))
+
+    @classmethod
+    def parse(cls, text: "str | TransferPolicy | TransferSpec"
+              ) -> "TransferPolicy":
+        """Inverse of ``str``: ``parse(str(policy)) == policy``.  A policy /
+        spec instance passes through (specs become one-rule policies); a
+        bare spec string (no ``=``) parses as ``**=<spec>``."""
+        if isinstance(text, cls):
+            return text
+        if isinstance(text, TransferSpec):
+            return cls.of(text)
+        if not isinstance(text, str):
+            raise UnsupportedPolicyError(
+                f"expected a policy string or TransferPolicy, got {text!r}")
+        if "=" not in text:
+            return cls.of(TransferSpec.parse(text.strip()))
+        rules = []
+        for chunk in text.split(";"):
+            chunk = chunk.strip()
+            if not chunk:
+                continue
+            pattern, eq, spec = chunk.partition("=")
+            if not eq or not pattern.strip() or not spec.strip():
+                raise UnsupportedPolicyError(
+                    f"cannot parse policy rule {chunk!r}: want "
+                    "'<pattern>=<spec>'")
+            rules.append(PolicyRule(pattern.strip(), spec.strip()))
+        return cls(tuple(rules))
+
+    def __str__(self) -> str:
+        return "; ".join(str(r) for r in self.rules)
+
+    # -- resolution ----------------------------------------------------------
+    def match(self, path: Union[str, TreePath]) -> PolicyRule:
+        """The winning rule for one leaf path (most specific; see module
+        docstring).  Total, thanks to the required default rule."""
+        got = TreePath.parse(path).steps      # parsed once, not per rule
+        best: Optional[PolicyRule] = None
+        best_score: Tuple[int, int, int] = (-1, -1, -1)
+        for rule in self.rules:
+            if rule._match_steps(got):
+                score = rule.specificity()
+                if score > best_score:
+                    best, best_score = rule, score
+        assert best is not None  # '**' always matches
+        return best
+
+    @property
+    def num_shards(self) -> int:
+        """The policy's (single, validated) sharded-mesh size, 1 if none."""
+        return max((r.spec.num_shards for r in self.rules), default=1)
+
+
+# ---------------------------------------------------------------------------
+# region partitioning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """One policy region of a concrete treedef: the winning rule plus the
+    flat leaf indices (and their paths) it covers."""
+
+    rule: PolicyRule
+    indices: Tuple[int, ...]
+    paths: Tuple[str, ...]
+
+    @property
+    def key(self) -> str:
+        return self.rule.pattern
+
+    @property
+    def spec(self) -> TransferSpec:
+        return self.rule.spec
+
+
+def partition_tree(tree: Any, policy: Union[str, TransferPolicy]
+                   ) -> "collections.OrderedDict[str, Region]":
+    """Partition a tree's leaves into policy regions, in rule declaration
+    order (empty regions omitted).  Every leaf lands in exactly one region
+    — matching is total and single-winner — and the result depends only on
+    the treedef's paths, so treedef-equal trees partition identically."""
+    policy = TransferPolicy.parse(policy)
+    paths = leaf_paths(tree)
+    by_rule: Dict[str, List[int]] = {r.pattern: [] for r in policy.rules}
+    for i, path in enumerate(paths):
+        by_rule[policy.match(path).pattern].append(i)
+    out: "collections.OrderedDict[str, Region]" = collections.OrderedDict()
+    for rule in policy.rules:
+        idx = by_rule[rule.pattern]
+        if idx:
+            out[rule.pattern] = Region(
+                rule, tuple(idx), tuple(str(paths[i]) for i in idx))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the compiled program
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ProgramStats:
+    """One ``to_device`` pass of a program: how many H2D copies each region
+    enqueued, and that the whole pass synchronized exactly once."""
+
+    enqueues: Dict[str, int]
+    syncs: int
+    sync_s: float
+
+    @property
+    def enqueue_total(self) -> int:
+        return sum(self.enqueues.values())
+
+
+class TransferProgram:
+    """A policy compiled against one treedef: per-region scheme executors
+    over a shared session, executed as ONE transfer pass.
+
+    ``to_device`` stages every region through its executor's ``begin_pass``
+    (enqueue-only), issues a single ``jax.block_until_ready`` over all
+    in-flight copies, then finishes each region's bookkeeping — so a
+    program pass has exactly one sync no matter how many regions/buckets
+    it ships.  Ledgers stay per region (``ledgers``/``region_ledger``);
+    :meth:`merged_ledger` sums them, and the delta invariant
+    ``h2d_bytes_by_device[d] + skipped_bytes_by_device[d] == full bytes[d]``
+    survives the merge because each region's accounting is per-device
+    exact.
+    """
+
+    def __init__(self, session: Any, policy: TransferPolicy, treedef: Any,
+                 regions: "collections.OrderedDict[str, Region]"):
+        from .schemes import transfer_scheme
+
+        self.session = session
+        self.policy = policy
+        self.treedef = treedef
+        self.regions = regions
+        # one thin executor per region over the shared session; delta state
+        # stays PRIVATE to this program (a fresh program's first pass is
+        # always a full cold transfer, like a fresh executor's), but the
+        # session still tracks it so session.clear() releases it.
+        self._schemes = collections.OrderedDict(
+            (key, transfer_scheme(region.spec, session))
+            for key, region in regions.items())
+        self.last_stats: Optional[ProgramStats] = None
+
+    # -- views ---------------------------------------------------------------
+    def scheme(self, key: str):
+        return self._schemes[key]
+
+    @property
+    def ledgers(self) -> Dict[str, Any]:
+        """Region-keyed ledgers (pattern -> TransferLedger)."""
+        return {k: s.ledger for k, s in self._schemes.items()}
+
+    def region_ledger(self, key: str):
+        return self._schemes[key].ledger
+
+    def merged_ledger(self):
+        """One ledger summing every region's (plus this program's sync
+        wall) — the whole-pass data-motion picture."""
+        from .schemes import TransferLedger
+
+        out = TransferLedger().merge(*[s.ledger
+                                       for s in self._schemes.values()])
+        if self.last_stats is not None:
+            out.record_wall(0.0, self.last_stats.sync_s)
+        return out
+
+    def region_of(self, path: Union[str, TreePath]) -> str:
+        return self.policy.match(path).pattern
+
+    def reset_ledgers(self) -> None:
+        for s in self._schemes.values():
+            s.ledger.reset()
+
+    # -- execution -----------------------------------------------------------
+    def _flatten(self, tree: Any) -> List[Any]:
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if treedef != self.treedef:
+            raise ValueError(
+                f"tree does not match the compiled treedef: got {treedef}, "
+                f"compiled for {self.treedef}")
+        return leaves
+
+    def to_device(self, tree: Any) -> Any:
+        """One program pass: enqueue all regions' buckets, ONE sync, finish.
+
+        Each region moves its leaves under its own spec (delta regions ship
+        only dirty buckets/shards; uvm regions wrap lazily and fault later,
+        contributing zero enqueues here)."""
+        leaves = self._flatten(tree)
+        pending_all: List[Any] = []
+        finishes: List[Tuple[Region, Any]] = []
+        enqueues: Dict[str, int] = {}
+        for key, region in self.regions.items():
+            sub = [leaves[i] for i in region.indices]
+            pending, finish = self._schemes[key].begin_pass(sub)
+            enqueues[key] = len(pending)
+            pending_all.extend(pending)
+            finishes.append((region, finish))
+        t0 = time.perf_counter()
+        jax.block_until_ready(pending_all)
+        sync_s = time.perf_counter() - t0
+        out = list(leaves)
+        for region, finish in finishes:
+            for i, leaf in zip(region.indices,
+                               jax.tree_util.tree_leaves(
+                                   finish(), is_leaf=_is_opaque_leaf)):
+                out[i] = leaf
+        self.last_stats = ProgramStats(enqueues, 1, sync_s)
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def from_device(self, device_tree: Any, host_tree: Any) -> Any:
+        """D2H per region under each region's spec (demarshal / selective
+        fetch / demand fetch)."""
+        dev_leaves = self._flatten(device_tree)
+        host_leaves = self._flatten(host_tree)
+        out = list(host_leaves)
+        for key, region in self.regions.items():
+            sub_dev = [dev_leaves[i] for i in region.indices]
+            sub_host = [host_leaves[i] for i in region.indices]
+            back = self._schemes[key].from_device(sub_dev, sub_host)
+            for i, leaf in zip(region.indices, back):
+                out[i] = leaf
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def mark_dirty(self, tree: Any, *paths: Union[str, TreePath]) -> None:
+        """Delta API for in-place host mutators: flag the buckets under
+        ``paths`` (all delta regions' buckets if none given) in every delta
+        region holding leaves below them — an interior path's leaves may
+        span several regions."""
+        leaves = self._flatten(tree)
+        roots = [str(TreePath.parse(p)) for p in paths]
+        for key, region in self.regions.items():
+            scheme = self._schemes[key]
+            if not getattr(scheme, "delta", False):
+                continue
+            sub = [leaves[i] for i in region.indices]
+            if not roots:
+                scheme.mark_dirty(sub)
+                continue
+            local = [f"[{j}]" for j, gp in enumerate(region.paths)
+                     if any(gp == r or gp.startswith(r + ".")
+                            or gp.startswith(r + "[") for r in roots)]
+            if local:
+                scheme.mark_dirty(sub, *local)
+
+    # -- lifecycle -----------------------------------------------------------
+    def clear(self) -> None:
+        """Release everything this program retains on device: per-region
+        delta state (retained buckets + memoized unpacks), entry references
+        (staging buffers + their fences), and the region ledgers' counters.
+        The program stays usable — the next pass is cold."""
+        for scheme in self._schemes.values():
+            state = getattr(scheme, "_delta_state", None)
+            if state is not None:
+                state.clear()
+            if hasattr(scheme, "_entry"):
+                scheme._entry = None
+                scheme.layout = None
+            scheme.ledger.reset()
+        self.last_stats = None
+
+
+def _is_opaque_leaf(x: Any) -> bool:
+    """Treat scheme-produced wrapper leaves (UVM LazyLeaf) as leaves when
+    re-flattening a region's finished output."""
+    from .schemes import LazyLeaf
+
+    return isinstance(x, LazyLeaf)
+
+
+def compile_program(tree: Any, policy: Union[str, TransferPolicy],
+                    session: Any = None) -> TransferProgram:
+    """Compile ``policy`` against ``tree``'s treedef (the functional door;
+    ``TransferSession.compile`` is the session method).  Warms the session's
+    layout/entry caches for every marshalling region so repeat passes are
+    pure data motion."""
+    from . import engine as engine_lib
+
+    session = session if session is not None else engine_lib.get_session()
+    policy = TransferPolicy.parse(policy)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    regions = partition_tree(tree, policy)
+    program = TransferProgram(session, policy, treedef, regions)
+    for key, region in regions.items():
+        if region.spec.kind == "marshal":
+            sub = [leaves[i] for i in region.indices]
+            session.get_entry(sub, region.spec.align_elems,
+                              sharding=program._schemes[key].sharding)
+    return program

@@ -260,6 +260,22 @@ class TransferScheme:
     def to_device(self, tree: Any, paths: Optional[Sequence[Union[str, TreePath]]] = None) -> Any:
         raise NotImplementedError
 
+    def begin_pass(self, tree: Any,
+                   paths: Optional[Sequence[Union[str, TreePath]]] = None
+                   ) -> Tuple[List[Any], Callable[[], Any]]:
+        """Enqueue this scheme's H2D copies for ``tree`` WITHOUT a sync.
+
+        Returns ``(pending, finish)``: ``pending`` are the in-flight device
+        values the caller must include in its own (single) barrier, and
+        ``finish()`` — called after that barrier — completes the ledger /
+        retained-state bookkeeping and returns the device tree.  This is the
+        two-phase half of ``to_device`` that lets a compiled
+        :class:`~repro.core.policy.TransferProgram` enqueue EVERY region's
+        buckets before one ``jax.block_until_ready`` (staging safety comes
+        from the per-buffer fence discipline, not the barrier).
+        """
+        raise NotImplementedError
+
     def from_device(self, device_tree: Any, host_tree: Any,
                     paths: Optional[Sequence[Union[str, TreePath]]] = None) -> Any:
         raise NotImplementedError
@@ -410,6 +426,12 @@ class UVMScheme(TransferScheme):
         dev = self.materialize(dev, paths=list(uvm_access or used_paths))
         return dev, (declare(tree, *used_paths) if declare_refs else ())
 
+    def begin_pass(self, tree, paths=None):
+        # demand paging transfers at ACCESS time, not program-pass time:
+        # zero enqueues here, faults (and their ledger records) happen when
+        # the lazy leaves are first dereferenced.
+        return [], lambda: self.to_device(tree)
+
     def from_device(self, device_tree, host_tree, paths=None):
         # demand paging back: every device leaf is its own granule, but the
         # fetch burst is enqueued together and synchronized once.
@@ -535,24 +557,32 @@ class MarshalScheme(TransferScheme):
             self.ledger.record_wall(0.0, fence_s)
 
     # -- double-buffered full transfers (the §7 pipeline, no delta skip) -----
-    def _to_device_pipelined(self, tree):
+    def _begin_pipelined(self, tree):
         entry = self._entry_for(tree)
         buffers = entry.pack_host(tree)
         self._record_fence_wait(entry)
         names = list(buffers)
         dev = self._put_batch([buffers[b] for b in names], sync=False)
-        out_leaves = entry.unpack_leaves_jit(dict(zip(names, dev)))
-        out = jax.tree_util.tree_unflatten(entry.layout.treedef,
-                                           list(out_leaves))
-        for b, arr in zip(names, dev):
-            entry.add_fence(b, [arr])
-        for b in names:
-            entry.add_fence(b, [out_leaves[i]
-                                for i in entry._bucket_slots[b]])
-        return out
+
+        def finish():
+            out_leaves = entry.unpack_leaves_jit(dict(zip(names, dev)))
+            out = jax.tree_util.tree_unflatten(entry.layout.treedef,
+                                               list(out_leaves))
+            for b, arr in zip(names, dev):
+                entry.add_fence(b, [arr])
+            for b in names:
+                entry.add_fence(b, [out_leaves[i]
+                                    for i in entry._bucket_slots[b]])
+            return out
+
+        return list(dev), finish
+
+    def _to_device_pipelined(self, tree):
+        _, finish = self._begin_pipelined(tree)
+        return finish()
 
     # -- delta: dirty-bucket incremental transfers ---------------------------
-    def _to_device_delta(self, tree):
+    def _begin_delta(self, tree):
         entry = self._entry_for(tree)
         buffers = entry.pack_host(tree, trust_identity=True)
         # fence waits done inside pack_host are this path's sync cost
@@ -566,38 +596,63 @@ class MarshalScheme(TransferScheme):
         if not dirty:
             memo = self._delta_state.last_unpack.get(entry)
             if memo is not None and memo[0] == entry.versions:
-                # fully clean repeat: the previously attached device tree is
-                # immutable and still bit-identical — return it as-is.
-                for b in clean:
-                    self.ledger.record_skip(bucket_bytes[b],
-                                            device=self.device)
-                self.ledger.delta_calls += 1
-                return memo[1]
+                def finish_memo():
+                    # fully clean repeat: the previously attached device
+                    # tree is immutable and still bit-identical.
+                    for b in clean:
+                        self.ledger.record_skip(bucket_bytes[b],
+                                                device=self.device)
+                    self.ledger.delta_calls += 1
+                    return memo[1]
+
+                return [], finish_memo
         dev = self._put_batch([buffers[b] for b in dirty], sync=False)
-        for b, arr in zip(dirty, dev):
-            retained[b] = (entry.versions[b], arr)
-        for b in clean:
-            self.ledger.record_skip(bucket_bytes[b], device=self.device)
-        if clean:
-            self.ledger.delta_calls += 1
-        out_leaves = entry.unpack_leaves_jit(
-            {b: retained[b][1] for b in names})
-        out = jax.tree_util.tree_unflatten(entry.layout.treedef,
-                                           list(out_leaves))
-        # every retained device buffer aliases its bucket's ACTIVE staging
-        # buffer (a bucket only rotates when dirty, which replaces the
-        # retained copy), so fence each active buffer with the values that
-        # read it: the new DMA plus this call's gather outputs of THAT
-        # bucket's slots (each leaf slices only its own bucket — fencing
-        # the whole tree on every bucket would pin FENCE_DEPTH generations
-        # of the full device state).
-        for b, arr in zip(dirty, dev):
-            entry.add_fence(b, [arr])
-        for b in names:
-            entry.add_fence(b, [out_leaves[i]
-                                for i in entry._bucket_slots[b]])
-        self._delta_state.last_unpack[entry] = (dict(entry.versions), out)
-        return out
+
+        def finish():
+            for b, arr in zip(dirty, dev):
+                retained[b] = (entry.versions[b], arr)
+            for b in clean:
+                self.ledger.record_skip(bucket_bytes[b], device=self.device)
+            if clean:
+                self.ledger.delta_calls += 1
+            out_leaves = entry.unpack_leaves_jit(
+                {b: retained[b][1] for b in names})
+            out = jax.tree_util.tree_unflatten(entry.layout.treedef,
+                                               list(out_leaves))
+            # every retained device buffer aliases its bucket's ACTIVE
+            # staging buffer (a bucket only rotates when dirty, which
+            # replaces the retained copy), so fence each active buffer with
+            # the values that read it: the new DMA plus this call's gather
+            # outputs of THAT bucket's slots (each leaf slices only its own
+            # bucket — fencing the whole tree on every bucket would pin
+            # FENCE_DEPTH generations of the full device state).
+            for b, arr in zip(dirty, dev):
+                entry.add_fence(b, [arr])
+            for b in names:
+                entry.add_fence(b, [out_leaves[i]
+                                    for i in entry._bucket_slots[b]])
+            self._delta_state.last_unpack[entry] = (dict(entry.versions), out)
+            return out
+
+        return list(dev), finish
+
+    def _to_device_delta(self, tree):
+        _, finish = self._begin_delta(tree)
+        return finish()
+
+    def begin_pass(self, tree, paths=None):
+        """Enqueue-only half of :meth:`to_device` (see the base docstring).
+
+        All four mode combinations stage through the per-buffer fence
+        discipline, so the caller's single barrier is a latency choice, not
+        a correctness requirement."""
+        if self.delta and self.sharding is not None:
+            return self._begin_delta_sharded(tree)
+        if self.sharding is not None:
+            return self._begin_sharded(tree)
+        if self.delta:
+            return self._begin_delta(tree)
+        return self._begin_pipelined(tree)
 
     # -- sharded: per-device arenas ------------------------------------------
     def _bucket_sharding(self):
@@ -615,18 +670,9 @@ class MarshalScheme(TransferScheme):
                  for d, (sl,) in bsh.devices_indices_map((k,)).items()]
         return [d for _, d in sorted(items, key=lambda t: t[0])]
 
-    def _to_device_sharded(self, tree):
-        entry = self._entry_for(tree)
-        buffers = entry.pack_host(tree)
-        dev_bufs = self._put_sharded(buffers)
-        out = entry.unpack(dev_bufs)
-        # same sync-before-rewrite discipline as the single-device path:
-        # shard views alias staging until the fused gather has consumed them
-        return jax.block_until_ready(out)
-
-    def _put_sharded(self, buffers: "engine_lib.Buffers") -> Dict[str, Any]:
-        """Enqueue every (bucket, device) shard, ONE sync, then assemble
-        each bucket into a global array sharded over the whole mesh."""
+    def _enqueue_sharded(self, buffers: "engine_lib.Buffers") -> Dict[str, list]:
+        """Enqueue every (bucket, device) shard without synchronizing;
+        returns the per-bucket shard plan, enqueue time recorded."""
         bsh = self._bucket_sharding()
         plan: Dict[str, list] = {}
         t0 = time.perf_counter()
@@ -640,10 +686,13 @@ class MarshalScheme(TransferScheme):
                 shards.append((lo, hi, dev, jax.device_put(buf[lo:hi], dev)))
             shards.sort(key=lambda s: s[0])
             plan[b] = shards
-        t1 = time.perf_counter()
-        jax.block_until_ready([s[3] for ss in plan.values() for s in ss])
-        t2 = time.perf_counter()
-        self.ledger.record_wall(t1 - t0, t2 - t1)
+        self.ledger.record_wall(time.perf_counter() - t0, 0.0)
+        return plan
+
+    def _assemble_sharded(self, buffers: "engine_lib.Buffers",
+                          plan: Dict[str, list]) -> Dict[str, Any]:
+        """Ledger bookkeeping + global-array assembly of an enqueued plan."""
+        bsh = self._bucket_sharding()
         out: Dict[str, Any] = {}
         for b, shards in plan.items():
             itemsize = np.dtype(b).itemsize
@@ -653,8 +702,49 @@ class MarshalScheme(TransferScheme):
                 (int(buffers[b].shape[0]),), bsh, [s[3] for s in shards])
         return out
 
+    def _begin_sharded(self, tree):
+        entry = self._entry_for(tree)
+        buffers = entry.pack_host(tree)
+        self._record_fence_wait(entry)
+        plan = self._enqueue_sharded(buffers)
+        pending = [s[3] for ss in plan.values() for s in ss]
+
+        def finish():
+            dev_bufs = self._assemble_sharded(buffers, plan)
+            names = list(buffers)
+            out_leaves = entry.unpack_leaves_jit(dev_bufs)
+            out = jax.tree_util.tree_unflatten(entry.layout.treedef,
+                                               list(out_leaves))
+            # shard views alias staging: fence each bucket with its global
+            # array (which holds the per-shard arrays) + its gather outputs
+            for b in names:
+                entry.add_fence(b, [dev_bufs[b]])
+                entry.add_fence(b, [out_leaves[i]
+                                    for i in entry._bucket_slots[b]])
+            return out
+
+        return pending, finish
+
+    def _to_device_sharded(self, tree):
+        entry = self._entry_for(tree)
+        buffers = entry.pack_host(tree)
+        dev_bufs = self._put_sharded(buffers)
+        out = entry.unpack(dev_bufs)
+        # same sync-before-rewrite discipline as the single-device path:
+        # shard views alias staging until the fused gather has consumed them
+        return jax.block_until_ready(out)
+
+    def _put_sharded(self, buffers: "engine_lib.Buffers") -> Dict[str, Any]:
+        """Enqueue every (bucket, device) shard, ONE sync, then assemble
+        each bucket into a global array sharded over the whole mesh."""
+        plan = self._enqueue_sharded(buffers)
+        t0 = time.perf_counter()
+        jax.block_until_ready([s[3] for ss in plan.values() for s in ss])
+        self.ledger.record_wall(0.0, time.perf_counter() - t0)
+        return self._assemble_sharded(buffers, plan)
+
     # -- delta x sharding: per-(bucket, device) incremental transfers --------
-    def _to_device_delta_sharded(self, tree):
+    def _begin_delta_sharded(self, tree):
         """The composed axes: pack versions per shard, re-ship ONLY the
         (bucket, device) shards whose bytes moved, book every clean shard
         as skipped bytes ON ITS DEVICE, and assemble each bucket from the
@@ -684,41 +774,53 @@ class MarshalScheme(TransferScheme):
         if not ships:
             memo = self._delta_state.last_unpack.get(entry)
             if memo is not None and memo[0] == entry.shard_versions:
-                # fully clean repeat: zero DMA, zero dispatch — every shard
-                # of every bucket is booked as skipped on its device.
-                for b, s, nbytes, dev in skips:
-                    self.ledger.record_skip(nbytes, device=dev)
-                self.ledger.delta_calls += 1
-                return memo[1]
+                def finish_memo():
+                    # fully clean repeat: zero DMA, zero dispatch — every
+                    # shard of every bucket is booked as skipped on its
+                    # device.
+                    for b, s, nbytes, dev in skips:
+                        self.ledger.record_skip(nbytes, device=dev)
+                    self.ledger.delta_calls += 1
+                    return memo[1]
+
+                return [], finish_memo
         t0 = time.perf_counter()
         new = [(b, s, dev, jax.device_put(buffers[b][lo:hi], dev))
                for b, s, lo, hi, dev in ships]
         self.ledger.record_wall(time.perf_counter() - t0, 0.0)
-        for (b, s, lo, hi, dev), (_, _, _, arr) in zip(ships, new):
-            retained[b][s] = (entry.shard_versions[b][s], arr)
-            self.ledger.record_h2d((hi - lo) * np.dtype(b).itemsize,
-                                   device=dev)
-        for b, s, nbytes, dev in skips:
-            self.ledger.record_skip(nbytes, device=dev)
-        if skips:
-            self.ledger.delta_calls += 1
-        bsh = self._bucket_sharding()
-        assembled = {
-            b: jax.make_array_from_single_device_arrays(
-                (int(entry.layout.bucket_sizes[b]),), bsh,
-                [retained[b][s][1] for s in range(k)])
-            for b in names}
-        out_leaves = entry.unpack_leaves_jit(assembled)
-        out = jax.tree_util.tree_unflatten(entry.layout.treedef,
-                                           list(out_leaves))
-        for b, s, dev, arr in new:
-            entry.add_fence(b, [arr])
-        for b in names:
-            entry.add_fence(b, [out_leaves[i]
-                                for i in entry._bucket_slots[b]])
-        self._delta_state.last_unpack[entry] = (
-            {b: list(v) for b, v in entry.shard_versions.items()}, out)
-        return out
+
+        def finish():
+            for (b, s, lo, hi, dev), (_, _, _, arr) in zip(ships, new):
+                retained[b][s] = (entry.shard_versions[b][s], arr)
+                self.ledger.record_h2d((hi - lo) * np.dtype(b).itemsize,
+                                       device=dev)
+            for b, s, nbytes, dev in skips:
+                self.ledger.record_skip(nbytes, device=dev)
+            if skips:
+                self.ledger.delta_calls += 1
+            bsh = self._bucket_sharding()
+            assembled = {
+                b: jax.make_array_from_single_device_arrays(
+                    (int(entry.layout.bucket_sizes[b]),), bsh,
+                    [retained[b][s][1] for s in range(k)])
+                for b in names}
+            out_leaves = entry.unpack_leaves_jit(assembled)
+            out = jax.tree_util.tree_unflatten(entry.layout.treedef,
+                                               list(out_leaves))
+            for b, s, dev, arr in new:
+                entry.add_fence(b, [arr])
+            for b in names:
+                entry.add_fence(b, [out_leaves[i]
+                                    for i in entry._bucket_slots[b]])
+            self._delta_state.last_unpack[entry] = (
+                {b: list(v) for b, v in entry.shard_versions.items()}, out)
+            return out
+
+        return [arr for _, _, _, arr in new], finish
+
+    def _to_device_delta_sharded(self, tree):
+        _, finish = self._begin_delta_sharded(tree)
+        return finish()
 
     def from_device(self, device_tree, host_tree, paths=None):
         # demarshal: fused scatter repack on device, batched D2H per bucket
@@ -764,6 +866,17 @@ class PointerChainScheme(TransferScheme):
         # the same treedef.
         dev = self.to_device(tree, paths=list(used_paths))
         return dev, self.refs
+
+    def begin_pass(self, tree, paths=None):
+        # one enqueue per declared chain (every leaf when the region has no
+        # chain selection), no sync — the caller's barrier covers them
+        if paths is None:
+            paths = [str(p) for p, _ in leaf_items(tree)]
+        self.refs = declare(tree, *paths)
+        leaves = extract(tree, self.refs)
+        dev_leaves = self._put_batch(leaves, sync=False)
+        return list(dev_leaves), \
+            lambda: insert(tree, self.refs, dev_leaves)
 
     def extract_leaves(self, tree: Any) -> list[Any]:
         return extract(tree, self.refs)

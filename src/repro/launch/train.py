@@ -24,8 +24,8 @@ from repro.models import pspec, registry
 from repro.optim import make_optimizer, warmup_cosine
 from repro.runtime import loop as loop_mod
 from repro.runtime.train import (init_error_state, make_dp_train_step,
-                                 make_train_step, train_state,
-                                 train_state_axes)
+                                 make_train_step, state_transfer_policy,
+                                 train_state, train_state_axes)
 
 
 def main(argv=None):
@@ -90,6 +90,12 @@ def main(argv=None):
         lambda s: {k: np.asarray(v) for k, v in data.batch(s).items()},
         num_steps=args.steps, ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every, state_shardings=state_shardings,
+        # restored checkpoints stage through ONE policy program: arena
+        # params + delta opt state + marshalled metadata.  NOT on the
+        # dp-shardmap path: its shard_map step needs replicated,
+        # uncommitted state, and a program's device_put commits placement.
+        state_policy=state_transfer_policy()
+        if state_shardings is None and not args.dp_shardmap else None,
         log_every=args.log_every)
 
     losses = [m["loss"] for m in res.metrics_history]

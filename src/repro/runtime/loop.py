@@ -64,20 +64,42 @@ def run(train_step: Callable, init_state_fn: Callable[[], Any],
         failure_injector: Optional[Callable[[int], None]] = None,
         max_restarts: int = 3,
         state_shardings: Optional[Any] = None,
+        state_policy: Optional[Any] = None,
         watchdog: Optional[StragglerWatchdog] = None,
         log_every: int = 0) -> TrainLoopResult:
-    """Run ``num_steps`` of training with checkpoint/restart semantics."""
+    """Run ``num_steps`` of training with checkpoint/restart semantics.
+
+    ``state_policy`` (a path-scoped :class:`~repro.core.TransferPolicy` or
+    policy string, e.g. ``repro.runtime.train.state_transfer_policy()``)
+    stages restored checkpoints host->device as ONE compiled
+    TransferProgram — params/opt-state/metadata each under their own spec,
+    one sync for the whole state — instead of the per-leaf ``jnp.asarray``
+    walk.  Exclusive with ``state_shardings`` (which restores through the
+    checkpoint layer's own device placement)."""
     watchdog = watchdog or StragglerWatchdog()
     ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
     restarts = 0
     history: List[Dict[str, float]] = []
+    if state_policy is not None and state_shardings is not None:
+        raise ValueError("state_policy and state_shardings are exclusive")
 
     def fresh_or_restored():
         if ckpt_dir and latest_step(ckpt_dir) is not None:
             host = restore(ckpt_dir, shardings=state_shardings)
             step0 = int(np.asarray(host["step"]))
             if state_shardings is None:
-                host = jax.tree_util.tree_map(jax.numpy.asarray, host)
+                if state_policy is not None:
+                    # a fresh program per restore (cold pass, no retained
+                    # buckets that a later donated train step could have
+                    # invalidated); the session's layout/entry caches make
+                    # recompiling cheap, and the whole state still stages
+                    # behind ONE sync.
+                    from ..core import get_session
+
+                    host = get_session().compile(
+                        host, state_policy).to_device(host)
+                else:
+                    host = jax.tree_util.tree_map(jax.numpy.asarray, host)
             return host, step0
         return init_state_fn(), 0
 

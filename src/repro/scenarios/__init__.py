@@ -7,16 +7,19 @@ every benchmark entry point / differential test iterates
 :func:`iter_scenarios`.  See DESIGN.md §6 for the contract.
 """
 from .base import (Motion, PAPER_SCHEMES, Scenario, SCHEME_NAMES,
-                   SIZE_PRESETS, derive_motion, derive_steady_motion,
+                   SIZE_PRESETS, derive_motion, derive_policy_motion,
+                   derive_steady_motion, derive_steady_policy_motion,
                    family_names, get_family, iter_scenarios, register)
-from .driver import (Measurement, SteadyMeasurement, motion_matches,
-                     run_algorithm2, run_scenario, run_steady_scenario)
+from .driver import (Measurement, PolicyMeasurement, SteadyMeasurement,
+                     motion_matches, run_algorithm2, run_policy_scenario,
+                     run_scenario, run_steady_scenario)
 from .families import (LINEAR_LAYOUTS, chain_access_set, data_sharding,
                        deep_narrow_case, deep_narrow_chain, deep_narrow_tree,
                        dense_case, dense_chain, dense_expected, dense_tree,
                        dense_uvm_access_set, linear_case, linear_chain,
                        linear_expected, linear_tree, linear_used_paths,
-                       mixed_dtype_case, mixed_dtype_tree, model_state_case,
+                       mixed_dtype_case, mixed_dtype_tree,
+                       mixed_policy_case, mixed_policy_tree, model_state_case,
                        ragged_case, ragged_tree, sharded_case,
                        sharded_delta_case, sharded_delta_steady_expected,
                        sharded_delta_tree, sharded_tree,
@@ -25,9 +28,11 @@ from .families import (LINEAR_LAYOUTS, chain_access_set, data_sharding,
 
 __all__ = [
     "Motion", "PAPER_SCHEMES", "Scenario", "SCHEME_NAMES", "SIZE_PRESETS",
-    "derive_motion", "derive_steady_motion",
+    "derive_motion", "derive_policy_motion", "derive_steady_motion",
+    "derive_steady_policy_motion",
     "family_names", "get_family", "iter_scenarios", "register",
-    "Measurement", "SteadyMeasurement", "motion_matches", "run_algorithm2",
+    "Measurement", "PolicyMeasurement", "SteadyMeasurement",
+    "motion_matches", "run_algorithm2", "run_policy_scenario",
     "run_scenario", "run_steady_scenario",
     "LINEAR_LAYOUTS", "chain_access_set", "data_sharding",
     "linear_case", "linear_chain", "linear_expected", "linear_tree",
@@ -36,6 +41,7 @@ __all__ = [
     "dense_uvm_access_set",
     "ragged_case", "ragged_tree",
     "mixed_dtype_case", "mixed_dtype_tree",
+    "mixed_policy_case", "mixed_policy_tree",
     "deep_narrow_case", "deep_narrow_chain", "deep_narrow_tree",
     "wide_shallow_case", "wide_shallow_tree",
     "model_state_case",

@@ -23,7 +23,8 @@ from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Seque
 
 import numpy as np
 
-from repro.core import TransferSpec, arena, declare, extract
+from repro.core import (TransferPolicy, TransferSpec, arena, declare, extract,
+                        partition_tree)
 
 SIZE_PRESETS = ("smoke", "quick", "full")
 SCHEME_NAMES = ("uvm", "marshal", "marshal_delta", "pointerchain")
@@ -170,6 +171,73 @@ def derive_steady_motion(tree: Any, mutate_paths: Sequence[str],
                   by_shard=tuple((b, c) for b, c in per_shard))
 
 
+def _region_subtree(tree: Any, indices: Sequence[int]) -> List[Any]:
+    import jax
+
+    leaves = jax.tree_util.tree_leaves(tree)
+    return [leaves[i] for i in indices]
+
+
+def derive_policy_motion(tree: Any, policy: Any) -> Dict[str, Motion]:
+    """Region-aware :func:`derive_motion`: the exact per-region data motion
+    of ONE cold :class:`~repro.core.policy.TransferProgram` pass.
+
+    Each region moves under its own spec — marshal regions ship every dtype
+    bucket of the REGION's arena (per device when sharded), pointerchain
+    regions one DMA per region leaf, and uvm regions nothing at program
+    pass time (demand paging transfers at access time).  Keys are the rule
+    patterns, matching ``TransferProgram.ledgers``; families with
+    closed-form expectations (``Scenario.region_expected``) provide the
+    third leg of the differential."""
+    policy = TransferPolicy.parse(policy)
+    out: Dict[str, Motion] = {}
+    for key, region in partition_tree(tree, policy).items():
+        spec = region.spec
+        sub = _region_subtree(tree, region.indices)
+        k = spec.num_shards
+        if spec.kind == "uvm":
+            out[key] = Motion(0, 0)
+        elif spec.kind == "pointerchain":
+            total = sum(_nbytes(l) for l in sub)
+            calls = len(sub)
+            out[key] = Motion(total, calls) if k == 1 else \
+                Motion(total, calls * k, total // k, calls)
+        else:
+            out[key] = derive_motion(sub, [], None, spec,
+                                     align_elems=spec.align_elems,
+                                     num_shards=k)
+    return out
+
+
+def derive_steady_policy_motion(tree: Any, policy: Any,
+                                mutate_paths: Sequence[str]
+                                ) -> Dict[str, Motion]:
+    """Region-aware :func:`derive_steady_motion`: per-region motion of one
+    WARM program pass after mutating the leaves at ``mutate_paths``.
+
+    Delta regions ship only the dtype buckets (per device: only the bucket
+    shards) the mutation overlaps — a region holding none of the mutated
+    leaves moves zero bytes.  Non-delta marshal and pointerchain regions
+    re-ship their full cold motion every pass; uvm regions stay at zero."""
+    policy = TransferPolicy.parse(policy)
+    mutated = {r.flat_index for r in declare(tree, *mutate_paths)}
+    out: Dict[str, Motion] = {}
+    for key, region in partition_tree(tree, policy).items():
+        spec = region.spec
+        sub = _region_subtree(tree, region.indices)
+        if spec.kind == "marshal" and spec.delta:
+            local = [f"[{j}]" for j, i in enumerate(region.indices)
+                     if i in mutated]
+            out[key] = derive_steady_motion(sub, local,
+                                            num_shards=spec.num_shards,
+                                            align_elems=spec.align_elems)
+        elif spec.kind == "uvm":
+            out[key] = Motion(0, 0)
+        else:
+            out[key] = derive_policy_motion(sub, TransferPolicy.of(spec))["**"]
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """One concrete workload cell of the benchmark/test matrix.
@@ -203,6 +271,25 @@ class Scenario:
     # steady harness runs (defaults to plain "marshal+delta").
     steady_expected: Optional[Motion] = None
     steady_spec: Optional[TransferSpec] = None
+    # policy scenarios: the path-scoped TransferPolicy the scenario is
+    # DESIGNED for (a policy string; ``policy()`` parses it), plus optional
+    # closed-form per-region Motion for the cold program pass and for one
+    # steady pass after mutating params["mutate_paths"] — keys are rule
+    # patterns, matching ``TransferProgram.ledgers``.
+    declared_policy: Optional[str] = None
+    region_expected: Optional[Mapping[str, Motion]] = None
+    steady_region_expected: Optional[Mapping[str, Motion]] = None
+
+    def policy(self, spec: Union[str, TransferSpec, None] = None
+               ) -> Optional[TransferPolicy]:
+        """The scenario's transfer policy: with ``spec``, the one-rule
+        policy that whole-tree spec becomes (``**=<spec>``); otherwise the
+        scenario's declared policy (None when it declares none)."""
+        if spec is not None:
+            return TransferPolicy.of(TransferSpec.parse(spec))
+        if self.declared_policy is not None:
+            return TransferPolicy.parse(self.declared_policy)
+        return None
 
     def specs(self) -> Tuple[TransferSpec, ...]:
         """The transfer specs this scenario runs under — every scheme kind,

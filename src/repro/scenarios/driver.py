@@ -25,10 +25,11 @@ from typing import Any, Dict, List, Optional, Sequence, Union
 import jax
 import numpy as np
 
-from repro.core import (TransferSpec, declare, extract, insert,
-                        transfer_scheme)
+from repro.core import (TransferPolicy, TransferSpec, declare, extract,
+                        insert, transfer_scheme)
 
-from .base import Motion, Scenario, derive_steady_motion
+from .base import (Motion, Scenario, derive_policy_motion,
+                   derive_steady_motion, derive_steady_policy_motion)
 
 
 @dataclasses.dataclass
@@ -84,7 +85,9 @@ def run_algorithm2(tree: Any, used_paths: Sequence[str],
                    spec: Union[str, TransferSpec, None] = None, *,
                    uvm_access: Optional[Sequence[str]] = None,
                    kernel_repeats: int = 1,
-                   scheme: Optional[Any] = None) -> Measurement:
+                   scheme: Optional[Any] = None,
+                   policy: Union[str, TransferPolicy, None] = None,
+                   program: Optional[Any] = None) -> Measurement:
     """One full Algorithm-2 pass; returns wall/kernel time + motion stats.
 
     ``spec`` is a :class:`TransferSpec` or spec string (legacy registry
@@ -93,7 +96,17 @@ def run_algorithm2(tree: Any, used_paths: Sequence[str],
     kernels) across repeats — the steady-state the engine is built for.
     The ledger is reset so the returned Measurement still reports per-pass
     data motion.
+
+    Region-aware form: pass ``policy`` (a path-scoped policy string /
+    :class:`TransferPolicy`) or a compiled ``program`` instead of a spec —
+    the transfer step is then ONE program pass (all regions' buckets
+    enqueued before a single sync), ``from_device`` runs per region, and
+    the Measurement's motion is the program's merged ledger.
     """
+    if policy is not None or program is not None:
+        return _run_algorithm2_program(tree, used_paths, policy=policy,
+                                       program=program,
+                                       kernel_repeats=kernel_repeats)
     if scheme is None:
         if spec is None:
             raise ValueError("need a spec or a scheme instance")
@@ -117,6 +130,20 @@ def run_algorithm2(tree: Any, used_paths: Sequence[str],
 
     # check step (Algorithm 2, line 7) — per declared leaf, so interior
     # used chains (expanded by declare) are verified leaf-by-leaf.
+    ok = _check_line7(tree, host, refs)
+
+    # kernel-only time on device-resident data
+    kernel_us = _kernel_only_us(tree, refs, kernel_repeats)
+
+    return Measurement(scheme.name, wall, kernel_us,
+                       scheme.ledger.h2d_bytes, scheme.ledger.h2d_calls, ok,
+                       skipped_bytes=scheme.ledger.skipped_bytes,
+                       per_device=scheme.ledger.per_device() or None,
+                       spec=str(getattr(scheme, "spec", "")) or None)
+
+
+def _check_line7(tree: Any, host: Any, refs) -> bool:
+    """Algorithm 2 line 7, per declared leaf."""
     ok = True
     host_leaves = jax.tree_util.tree_leaves(host)
     orig_leaves = jax.tree_util.tree_leaves(tree)
@@ -125,21 +152,57 @@ def run_algorithm2(tree: Any, used_paths: Sequence[str],
         got = np.asarray(host_leaves[r.flat_index], dtype=np.float64)
         want = np.asarray(want_leaf, dtype=np.float64) * _SCALE
         ok &= bool(np.allclose(got, want, rtol=_check_rtol(want_leaf)))
+    return ok
 
-    # kernel-only time on device-resident data
+
+def _kernel_only_us(tree: Any, refs, kernel_repeats: int) -> float:
+    kernel = _KERNEL
     dev_leaves = [jax.device_put(np.asarray(l)) for l in extract(tree, refs)]
     jax.block_until_ready(kernel(*dev_leaves))
     t0 = time.perf_counter()
     for _ in range(max(1, kernel_repeats)):
         out = kernel(*dev_leaves)
     jax.block_until_ready(out)
-    kernel_us = (time.perf_counter() - t0) / max(1, kernel_repeats) * 1e6
+    return (time.perf_counter() - t0) / max(1, kernel_repeats) * 1e6
 
-    return Measurement(scheme.name, wall, kernel_us,
-                       scheme.ledger.h2d_bytes, scheme.ledger.h2d_calls, ok,
-                       skipped_bytes=scheme.ledger.skipped_bytes,
-                       per_device=scheme.ledger.per_device() or None,
-                       spec=str(getattr(scheme, "spec", "")) or None)
+
+def _run_algorithm2_program(tree: Any, used_paths: Sequence[str], *,
+                            policy: Union[str, TransferPolicy, None],
+                            program: Optional[Any],
+                            kernel_repeats: int = 1) -> Measurement:
+    """Algorithm 2 with a compiled TransferProgram as the transfer step."""
+    from repro.core import get_session
+
+    if program is None:
+        program = get_session().compile(tree, TransferPolicy.parse(policy))
+    program.reset_ledgers()
+    refs = declare(tree, *used_paths)
+
+    t0 = time.perf_counter()
+    dev = program.to_device(tree)
+    # uvm regions stage lazily: the kernel's dereference is the access that
+    # faults those leaves (their DMAs land in the region ledger here)
+    from repro.core.schemes import LazyLeaf
+    leaves = [l.get() if isinstance(l, LazyLeaf) else l
+              for l in extract(dev, refs)]
+    # one kernel dispatch per declared leaf: regions live on DIFFERENT
+    # device sets (sharded params next to single-device opt state), so a
+    # single jitted call over all leaves would mix committed placements —
+    # each leaf's kernel runs where its region put it instead.
+    out_leaves = [_KERNEL(l)[0] for l in leaves]
+    jax.block_until_ready(out_leaves)
+    dev = insert(dev, refs, out_leaves)
+    host = program.from_device(dev, tree)
+    wall = (time.perf_counter() - t0) * 1e6
+
+    ok = _check_line7(tree, host, refs)
+    kernel_us = _kernel_only_us(tree, refs, kernel_repeats)
+    led = program.merged_ledger()
+    return Measurement("policy", wall, kernel_us, led.h2d_bytes,
+                       led.h2d_calls, ok,
+                       skipped_bytes=led.skipped_bytes,
+                       per_device=led.per_device() or None,
+                       spec=str(program.policy))
 
 
 def run_scenario(sc: Scenario, spec: Union[str, TransferSpec, None] = None, *,
@@ -273,4 +336,143 @@ def run_steady_scenario(sc: Scenario, *, passes: int = 3,
             motion_ok, spec=str(want_spec),
             h2d_by_device=dict(led.h2d_bytes_by_device) or None,
             skipped_by_device=dict(led.skipped_bytes_by_device) or None))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# policy programs — the region-aware differential harness
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PolicyMeasurement:
+    """One TransferProgram pass: per-region motion + program-level checks."""
+
+    policy: str
+    wall_us: float
+    ok: bool                      # staged values == host tree, leaf-for-leaf
+    motion_ok: bool               # every region ledger == its expectation
+    h2d_bytes: int                # merged across regions
+    h2d_calls: int
+    skipped_bytes: int
+    enqueues: int                 # H2D copies enqueued this pass …
+    syncs: int                    # … behind this many barriers (must be 1)
+    regions: Dict[str, Dict[str, Any]] = dataclasses.field(
+        default_factory=dict)     # region pattern -> ledger.as_dict()
+    expected: Optional[Dict[str, Motion]] = None
+
+
+def _region_motion_ok(scheme, ledger, expected: Motion,
+                      cold: Motion) -> bool:
+    """Exact region ledger == expectation, including the per-device split
+    and — for delta regions — the complement equality against the region's
+    full cold motion on EVERY device."""
+    spec = scheme.spec
+    ok = (ledger.h2d_bytes, ledger.h2d_calls) == expected.as_tuple()
+    if spec.delta:
+        ok &= ledger.h2d_bytes + ledger.skipped_bytes == cold.h2d_bytes
+    k = spec.num_shards
+    if k > 1:
+        per_dev_full = cold.h2d_bytes // k
+        for s, d in enumerate(scheme._shard_device_order()):
+            key = str(d.id)
+            moved = ledger.h2d_bytes_by_device.get(key, 0)
+            calls = ledger.h2d_calls_by_device.get(key, 0)
+            if spec.delta:
+                skipped = ledger.skipped_bytes_by_device.get(key, 0)
+                ok &= moved + skipped == per_dev_full
+                if expected.by_shard is not None:
+                    ok &= (moved, calls) == expected.by_shard[s]
+            elif expected.per_device_tuple() is not None:
+                ok &= (moved, calls) == expected.per_device_tuple()
+    return ok
+
+
+def _materialized_equal(dev: Any, host: Any) -> bool:
+    from repro.core.schemes import LazyLeaf
+
+    is_lazy = lambda l: isinstance(l, LazyLeaf)
+    dev_leaves = jax.tree_util.tree_leaves(dev, is_leaf=is_lazy)
+    host_leaves = jax.tree_util.tree_leaves(host)
+    return len(dev_leaves) == len(host_leaves) and all(
+        np.array_equal(np.asarray(a._host if is_lazy(a) else a),
+                       np.asarray(b))
+        for a, b in zip(dev_leaves, host_leaves))
+
+
+def run_policy_scenario(sc: Scenario,
+                        policy: Union[str, TransferPolicy, None] = None, *,
+                        tree: Any = None, passes: int = 1,
+                        program: Optional[Any] = None,
+                        session: Optional[Any] = None
+                        ) -> List[PolicyMeasurement]:
+    """Differential harness over a compiled program: pass 0 is cold, later
+    passes mutate ``params['mutate_paths']`` (when declared) and must ship
+    only what each region's spec allows.
+
+    Per pass, every region's ledger must equal the structural derivation
+    (:func:`derive_policy_motion` cold, :func:`derive_steady_policy_motion`
+    warm) exactly — and, when the scenario declares closed forms for its
+    own policy (``region_expected`` / ``steady_region_expected``), those
+    must agree with the derivation too, making the differential three-way:
+    closed form == structural == ledger.  Program-level invariants checked
+    every pass: ONE sync, enqueue count == H2D DMA count, and staged
+    values equal to the (possibly mutated) host tree leaf-for-leaf.
+    """
+    from repro.core import TreePath, get_session
+
+    if tree is None:
+        tree = sc.build()
+    if policy is None:
+        policy = sc.policy()
+        if policy is None:
+            raise ValueError(f"{sc.name} declares no policy; pass one")
+    policy = TransferPolicy.parse(policy)
+    if program is None:
+        program = (session or get_session()).compile(tree, policy)
+    declared = sc.declared_policy is not None and \
+        policy == TransferPolicy.parse(sc.declared_policy)
+    mutate = list(sc.params.get("mutate_paths")
+                  or filter(None, [sc.params.get("mutate_path")]))
+    cold_expected = derive_policy_motion(tree, policy)
+    out: List[PolicyMeasurement] = []
+    cur = tree
+    for i in range(passes):
+        if i:
+            for tp in map(TreePath.parse, mutate):
+                leaf = np.asarray(tp.resolve(cur))
+                cur = tp.set(cur, leaf + np.ones((), leaf.dtype))
+        program.reset_ledgers()
+        t0 = time.perf_counter()
+        dev = program.to_device(cur)
+        jax.block_until_ready([l for l in jax.tree_util.tree_leaves(dev)
+                               if isinstance(l, jax.Array)])
+        wall_us = (time.perf_counter() - t0) * 1e6
+        stats = program.last_stats
+        if i == 0:
+            expected = cold_expected
+            closed = sc.region_expected if declared else None
+        else:
+            # warm pass: delta regions ship only what the mutation dirtied
+            # (nothing, on a clean repeat); the rest re-ship their cold set
+            expected = derive_steady_policy_motion(cur, policy, mutate)
+            closed = sc.steady_region_expected if declared and mutate else None
+        motion_ok = set(expected) == set(program.ledgers)
+        for key, led in program.ledgers.items():
+            motion_ok &= _region_motion_ok(program.scheme(key), led,
+                                           expected[key], cold_expected[key])
+            if closed is not None and key in closed:
+                # the closed form must agree with the structural derivation
+                motion_ok &= closed[key].as_tuple() == expected[key].as_tuple()
+        merged = program.merged_ledger()
+        # one sync per program pass; every enqueue is exactly one DMA record
+        motion_ok &= stats.syncs == 1
+        motion_ok &= stats.enqueue_total == merged.h2d_calls
+        ok = _materialized_equal(dev, cur)
+        out.append(PolicyMeasurement(
+            str(policy), wall_us, ok, motion_ok,
+            merged.h2d_bytes, merged.h2d_calls, merged.skipped_bytes,
+            stats.enqueue_total, stats.syncs,
+            regions={k: led.as_dict()
+                     for k, led in program.ledgers.items()},
+            expected=expected))
     return out

@@ -535,6 +535,69 @@ def _sharded_delta_family(size: str) -> List[Scenario]:
 
 
 # ---------------------------------------------------------------------------
+# mixed_policy — path-scoped policy trees over model-shaped state
+# ---------------------------------------------------------------------------
+
+def mixed_policy_tree(n: int, seed: int = 23) -> Any:
+    """What real model state actually is (ISSUE 5): persistent sharded
+    params, hot optimizer state, and marshal/metadata odds and ends — three
+    regions a single whole-tree spec cannot serve.  All f32 payload sizes
+    are multiples of ``n`` (the family passes ``n = base * devices``), so
+    the params region splits evenly over any mesh the policy names."""
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": rng.standard_normal(2 * n).astype(np.float32),
+                   "b": rng.standard_normal(n).astype(np.float32)},
+        "opt": {"m": rng.standard_normal(n).astype(np.float32),
+                "v": rng.standard_normal(n).astype(np.float32),
+                "t": np.int32(0)},
+        "meta": {"ids": np.arange(2 * n, dtype=np.int32),
+                 "scale": rng.standard_normal(n).astype(np.float32)},
+    }
+
+
+def mixed_policy_case(n: int, k: int) -> Scenario:
+    """Closed-form per-region Motion for the declared policy
+    ``params/**=marshal@dp{k}; opt/**=marshal+delta; **=pointerchain``:
+
+    * params region — one f32 bucket of 3n elements (w + b), marshalled:
+      12n bytes in 1 DMA (per device: 12n/k bytes, 1 DMA each on a k-mesh).
+    * opt region — f32 bucket (m + v, 8n bytes) + i32 bucket (t, 4 bytes):
+      cold 8n+4 bytes in 2 DMAs; steady after mutating ``opt.m`` the f32
+      bucket ships whole (8n, 1) and the i32 bucket is skipped exactly.
+    * default region (meta) — pointerchain: one DMA per leaf, every pass:
+      ids (8n) + scale (4n) = 12n bytes in 2 DMAs.
+    """
+    pol = f"params/**=marshal@dp{k}; opt/**=marshal+delta; **=pointerchain"
+    params_cold = Motion(12 * n, 1) if k == 1 else \
+        Motion(12 * n, k, 12 * n // k, 1)
+    meta = Motion(12 * n, 2)
+    return Scenario(
+        name=f"mixed_policy_n{n}_dev{k}",
+        family="mixed_policy",
+        build=functools.partial(mixed_policy_tree, n),
+        used_paths=("params.w", "opt.m", "meta.scale"),
+        uvm_access=None,
+        declared_policy=pol,
+        region_expected={"params/**": params_cold,
+                         "opt/**": Motion(8 * n + 4, 2),
+                         "**": meta},
+        steady_region_expected={"params/**": params_cold,
+                                "opt/**": Motion(8 * n, 1),
+                                "**": meta},
+        params=dict(n=n, devices=k, mutate_paths=("opt.m",)))
+
+
+@register("mixed_policy")
+def _mixed_policy_family(size: str) -> List[Scenario]:
+    import jax
+
+    k = jax.device_count()
+    n = (8 if size == "smoke" else 128) * k
+    return [mixed_policy_case(n, k)]
+
+
+# ---------------------------------------------------------------------------
 # steady_reuse — the delta transfer steady state
 # ---------------------------------------------------------------------------
 

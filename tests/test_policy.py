@@ -1,0 +1,347 @@
+"""Path-scoped TransferPolicy trees + compiled TransferPrograms (ISSUE 5).
+
+  * exhaustive ``TransferPolicy.parse(str(policy)) == policy`` over a
+    pattern x spec matrix (randomly again in tests/test_policy_properties.py
+    behind importorskip, the repo's hypothesis pattern);
+  * every invalid policy raises the one canonical ``UnsupportedPolicyError``
+    (a subclass of ``UnsupportedSpecError``: the capability matrix has one
+    error family);
+  * most-specific-rule resolution and exact region partitioning;
+  * the mixed-policy acceptance criteria: sum of per-region ledgers ==
+    closed-form Motion == structural derivation, per device; ONE sync per
+    program pass with enqueue count == region bucket count; the per-device
+    complement ``h2d + skipped == full bytes`` under
+    ``params/**=marshal+delta@dp{k}``;
+  * ``full_deepcopy(policy=...)`` as the value/placement oracle;
+  * the ``TransferSession.clear()`` bugfix: no retained device buckets
+    after clear (asserted via ``cache_stats``).
+"""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (PolicyRule, TransferPolicy, TransferProgram,
+                        TransferSpec, UnsupportedPolicyError,
+                        UnsupportedSpecError, clear_cache, full_deepcopy,
+                        get_session, partition_tree)
+from repro.scenarios import (derive_policy_motion,
+                             derive_steady_policy_motion, iter_scenarios,
+                             mixed_policy_tree, run_algorithm2,
+                             run_policy_scenario)
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    clear_cache()
+    yield
+    clear_cache()
+
+
+def _mixed_scenario():
+    return iter_scenarios("smoke", only=["mixed_policy"])[0]
+
+
+# ------------------------------------------------------------------ grammar
+
+_PATTERNS = ("**", "params/**", "opt/m", "opt/layers[3]/**", "a/*/c",
+             "root/kids[0]/A", "*/w")
+_SPECS = ("marshal", "marshal+delta", "marshal+align64", "marshal+db",
+          "pointerchain", "uvm", "marshal+delta@dp8", "marshal@dev0",
+          "pointerchain@dp4")
+
+
+def _valid_policies():
+    """Every 1/2/3-rule combination of the pattern/spec pools that
+    validates — the exhaustive round-trip matrix."""
+    out = []
+    singles = [("**", s) for s in _SPECS]
+    pairs = [(p, s) for p, s in itertools.product(_PATTERNS[1:], _SPECS)]
+    for default in singles:
+        out.append((default,))
+        for a in pairs:
+            out.append((a, default))
+    for a, b in itertools.combinations(pairs[::3], 2):
+        if a[0] != b[0]:
+            out.append((a, b, ("**", "marshal")))
+    policies = []
+    for rules in out:
+        try:
+            policies.append(TransferPolicy(
+                tuple(PolicyRule(p, s) for p, s in rules)))
+        except UnsupportedPolicyError:
+            pass  # e.g. dp8 + dp4 rules in one policy
+    return policies
+
+
+_VALID = _valid_policies()
+
+
+def test_valid_matrix_is_nontrivial():
+    assert len(_VALID) > 60
+    assert any(len(p.rules) == 3 for p in _VALID)
+
+
+@pytest.mark.parametrize("policy", _VALID, ids=[str(p) for p in _VALID])
+def test_parse_str_roundtrip(policy):
+    assert TransferPolicy.parse(str(policy)) == policy
+    assert str(TransferPolicy.parse(str(policy))) == str(policy)
+    # parse is the identity on policies, and policies hash
+    assert TransferPolicy.parse(policy) is policy
+    assert hash(TransferPolicy.parse(str(policy))) == hash(policy)
+
+
+def test_bare_spec_parses_as_one_rule_policy():
+    p = TransferPolicy.parse("marshal+delta")
+    assert p == TransferPolicy.of(TransferSpec("marshal", delta=True))
+    assert str(p) == "**=marshal+delta"
+    assert p == TransferPolicy.parse(TransferSpec("marshal", delta=True))
+
+
+def test_pattern_canonicalization():
+    # attached and detached index spellings canonicalize identically
+    assert PolicyRule("opt/layers/[3]/w", "marshal").pattern == \
+        PolicyRule("opt/layers[3]/w", "marshal").pattern == "opt/layers[3]/w"
+
+
+@pytest.mark.parametrize("text", [
+    "",                                     # no rules
+    "params/**=marshal",                    # no default rule
+    "**=marshal; **=pointerchain",          # duplicate pattern
+    "a/**=marshal@dp4; b/**=marshal@dp8; **=marshal",  # overlapping shard axes
+    "**=uvm+delta",                         # rule spec off the matrix
+    "**=bogus",                             # unknown kind
+    "params/**",                            # not pattern=spec
+    "params/**/w=marshal; **=marshal",      # interior '**'
+    "a//b=marshal; **=marshal",             # empty step
+    "=marshal",                             # empty pattern
+    "**=",                                  # empty spec
+])
+def test_invalid_policies_raise_the_one_error(text):
+    with pytest.raises(UnsupportedSpecError):
+        TransferPolicy.parse(text)
+
+
+def test_policy_error_is_the_spec_error_family():
+    assert issubclass(UnsupportedPolicyError, UnsupportedSpecError)
+    with pytest.raises(UnsupportedPolicyError):
+        TransferPolicy.parse("params/**=marshal")
+
+
+# ------------------------------------------------------------- resolution
+
+def test_most_specific_rule_wins():
+    p = TransferPolicy.parse(
+        "params/w=pointerchain; params/**=marshal+delta; opt/*=uvm; "
+        "**=marshal")
+    assert p.match("params.w").pattern == "params/w"      # exact > globstar
+    assert p.match("params.b").pattern == "params/**"
+    assert p.match("opt.m").pattern == "opt/*"            # one-step wildcard
+    assert p.match("opt.nest.m").pattern == "**"          # '*' is one step
+    assert p.match("step").pattern == "**"
+
+
+def test_literal_prefix_beats_wildcard_prefix():
+    p = TransferPolicy.parse("a/b/**=marshal+delta; a/*=pointerchain; "
+                             "**=marshal")
+    # both match a.b (len-2 fixed prefixes); a/b/** has more literal steps
+    assert p.match("a.b").pattern == "a/b/**"
+    assert p.match("a.c").pattern == "a/*"
+
+
+def test_declaration_order_breaks_exact_ties():
+    p = TransferPolicy.parse("a/*=uvm; */b=pointerchain; **=marshal")
+    assert p.match("a.b").pattern == "a/*"   # equal specificity: first wins
+
+
+def test_partition_covers_every_leaf_exactly_once():
+    tree = mixed_policy_tree(8)
+    policy = TransferPolicy.parse(
+        "params/**=marshal; opt/**=marshal+delta; **=pointerchain")
+    regions = partition_tree(tree, policy)
+    n = len(jax.tree_util.tree_leaves(tree))
+    covered = sorted(i for r in regions.values() for i in r.indices)
+    assert covered == list(range(n))
+    # deterministic across treedef-equal trees (values differ)
+    regions2 = partition_tree(mixed_policy_tree(8, seed=99), policy)
+    assert {k: r.indices for k, r in regions.items()} == \
+        {k: r.indices for k, r in regions2.items()}
+
+
+# ------------------------------------------------------------- programs
+
+def test_program_one_sync_and_enqueue_counts():
+    """The acceptance invariant: one sync per program pass, enqueue count
+    == region bucket count (== the merged ledger's DMA count)."""
+    sc = _mixed_scenario()
+    tree = sc.build()
+    program = get_session().compile(tree, sc.policy())
+    program.to_device(tree)
+    stats = program.last_stats
+    assert stats.syncs == 1
+    # params: 1 f32 bucket (x1 device); opt: f32 + i32 buckets; meta: 2 chains
+    k = sc.params["devices"]
+    assert stats.enqueues == {"params/**": k, "opt/**": 2, "**": 2}
+    assert stats.enqueue_total == program.merged_ledger().h2d_calls
+
+
+def test_mixed_policy_three_way_differential():
+    """sum(per-region ledgers) == closed form == structural derivation,
+    cold and steady — run_policy_scenario enforces it per region."""
+    sc = _mixed_scenario()
+    ms = run_policy_scenario(sc, passes=3)
+    assert all(m.ok for m in ms)
+    assert all(m.motion_ok for m in ms)
+    # and the merged totals equal the sum of the declared closed forms
+    assert ms[0].h2d_bytes == sum(v.h2d_bytes
+                                  for v in sc.region_expected.values())
+    assert ms[1].h2d_bytes == sum(v.h2d_bytes
+                                  for v in sc.steady_region_expected.values())
+    # steady skips exactly the clean opt bucket (the i32 step counter)
+    assert ms[1].skipped_bytes == 4
+
+
+def test_program_matches_full_deepcopy_oracle():
+    sc = _mixed_scenario()
+    tree = sc.build()
+    ref = full_deepcopy(tree, policy=sc.policy())
+    dev = get_session().compile(tree, sc.policy()).to_device(tree)
+    for a, b in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(dev)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_program_from_device_round_trips():
+    sc = _mixed_scenario()
+    tree = sc.build()
+    program = get_session().compile(tree, sc.policy())
+    dev = program.to_device(tree)
+    kernel_path = "opt.m"
+    from repro.core import TreePath
+    tp = TreePath.parse(kernel_path)
+    dev = tp.set(dev, tp.resolve(dev) * 2.0)
+    host = program.from_device(dev, tree)
+    np.testing.assert_allclose(np.asarray(tp.resolve(host)),
+                               np.asarray(tree["opt"]["m"]) * 2.0, rtol=1e-6)
+    # untouched regions round-trip unchanged
+    np.testing.assert_array_equal(np.asarray(host["meta"]["ids"]),
+                                  tree["meta"]["ids"])
+
+
+def test_algorithm2_region_aware():
+    sc = _mixed_scenario()
+    tree = sc.build()
+    m = run_algorithm2(tree, list(sc.used_paths), policy=sc.policy())
+    assert m.ok
+    assert m.scheme == "policy"
+    assert m.h2d_bytes == sum(v.h2d_bytes
+                              for v in sc.region_expected.values())
+
+
+def test_structural_derivation_matches_closed_forms():
+    sc = _mixed_scenario()
+    tree = sc.build()
+    derived = derive_policy_motion(tree, sc.policy())
+    assert {k: v.as_tuple() for k, v in derived.items()} == \
+        {k: v.as_tuple() for k, v in sc.region_expected.items()}
+    steady = derive_steady_policy_motion(tree, sc.policy(),
+                                         sc.params["mutate_paths"])
+    assert {k: v.as_tuple() for k, v in steady.items()} == \
+        {k: v.as_tuple() for k, v in sc.steady_region_expected.items()}
+
+
+def test_uvm_region_stages_lazily():
+    tree = {"hot": np.arange(4, dtype=np.float32),
+            "cold": np.arange(8, dtype=np.float32)}
+    program = get_session().compile(tree, "hot=marshal; **=uvm")
+    dev = program.to_device(tree)
+    assert program.last_stats.enqueues == {"hot": 1, "**": 0}
+    led = program.region_ledger("**")
+    assert led.h2d_bytes == 0            # nothing moved at pass time
+    from repro.core.schemes import LazyLeaf
+    assert isinstance(dev["cold"], LazyLeaf)
+    np.testing.assert_array_equal(np.asarray(dev["cold"].get()),
+                                  tree["cold"])
+    assert led.h2d_bytes == tree["cold"].nbytes   # the fault, on access
+
+
+def test_program_mark_dirty_for_in_place_mutators():
+    """In-place host mutation + mark_dirty: the delta region re-compares
+    and re-ships exactly the flagged buckets; trust_identity alone would
+    have skipped the (same-object) mutated leaf."""
+    sc = _mixed_scenario()
+    tree = sc.build()
+    program = get_session().compile(tree, sc.policy())
+    program.to_device(tree)
+    program.to_device(tree)              # warm + memoized
+    tree["opt"]["m"][:4] += 1.0          # in-place: same leaf object
+    program.mark_dirty(tree, "opt.m")
+    program.reset_ledgers()
+    dev = program.to_device(tree)
+    led = program.region_ledger("opt/**")
+    f32_bucket = sc.steady_region_expected["opt/**"].h2d_bytes
+    assert (led.h2d_bytes, led.h2d_calls) == (f32_bucket, 1)
+    np.testing.assert_array_equal(np.asarray(dev["opt"]["m"]),
+                                  tree["opt"]["m"])
+
+
+def test_treedef_mismatch_raises():
+    tree = {"a": np.zeros(4, np.float32)}
+    program = get_session().compile(tree, "**=marshal")
+    with pytest.raises(ValueError, match="treedef"):
+        program.to_device({"a": np.zeros(4, np.float32), "b": np.zeros(2)})
+
+
+# ---------------------------------------------------- session lifecycle
+
+def test_session_clear_releases_program_state():
+    """ISSUE 5 bugfix: clear() must release compiled programs' per-region
+    DeltaState and entry caches — no retained device buckets after clear,
+    asserted via cache_stats."""
+    sc = _mixed_scenario()
+    tree = sc.build()
+    session = get_session()
+    program = session.compile(tree, sc.policy())
+    program.to_device(tree)
+    program.to_device(tree)          # warm: delta region retains buckets
+    stats = session.cache_stats()
+    assert stats["programs"] >= 1
+    assert stats["retained_device_buckets"] > 0
+    assert stats["entry_size"] > 0
+    session.clear()
+    stats = session.cache_stats()
+    assert stats["retained_device_buckets"] == 0
+    assert stats["entry_size"] == 0
+    # the program stays usable and is COLD again: full motion, no skips
+    program.to_device(tree)
+    led = program.merged_ledger()
+    assert led.skipped_bytes == 0
+    assert led.h2d_bytes == sum(v.h2d_bytes
+                                for v in sc.region_expected.values())
+
+
+# ----------------------------------------------------- train-state policy
+
+def test_state_policy_program_round_trips():
+    from repro.runtime.train import compile_state_program, \
+        state_transfer_policy
+
+    rng = np.random.default_rng(3)
+    state = {
+        "params": {"w": rng.standard_normal(256).astype(np.float32)},
+        "opt": {"m": rng.standard_normal(256).astype(np.float32),
+                "v": rng.standard_normal(256).astype(np.float32)},
+        "step": np.int32(7),
+    }
+    policy = state_transfer_policy(1)
+    assert TransferPolicy.parse(str(policy)) == policy
+    program = compile_state_program(state)
+    assert isinstance(program, TransferProgram)
+    dev = program.to_device(state)
+    assert program.last_stats.syncs == 1
+    for a, b in zip(jax.tree_util.tree_leaves(dev),
+                    jax.tree_util.tree_leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # params region uses the 128-aligned gradient-arena layout
+    assert program.scheme("params/**").spec.align_elems == 128

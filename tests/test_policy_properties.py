@@ -1,0 +1,108 @@
+"""Hypothesis properties of TransferPolicy resolution (ISSUE 5 satellite).
+
+Separate file behind importorskip (the repo pattern for hypothesis suites,
+see tests/test_spec_properties.py): the exhaustive deterministic matrix in
+tests/test_policy.py must keep running even where hypothesis is absent.
+
+Properties:
+  * every leaf of any tree is matched by exactly one region (partition);
+  * the most-specific matching rule wins (an exact-path rule always beats
+    any prefix/globstar rule for its own leaf);
+  * region partitioning is deterministic across treedef-equal trees;
+  * ``parse(str(policy)) == policy`` over randomly composed rule sets.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (PolicyRule, TransferPolicy, UnsupportedPolicyError,
+                        leaf_paths, partition_tree)
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+_NAMES = ("params", "opt", "meta", "w", "m", "kids", "a0")
+_SPECS = ("marshal", "marshal+delta", "pointerchain", "uvm",
+          "marshal+align64", "marshal+delta@dp8")
+
+
+@st.composite
+def trees(draw, depth=3):
+    """Random nested dict/list trees of tiny float32 leaves."""
+    if depth == 0 or draw(st.booleans()):
+        n = draw(st.integers(1, 4))
+        return np.arange(n, dtype=np.float32)
+    if draw(st.booleans()):
+        return [draw(trees(depth=depth - 1))
+                for _ in range(draw(st.integers(1, 3)))]
+    keys = draw(st.lists(st.sampled_from(_NAMES), min_size=1, max_size=3,
+                         unique=True))
+    return {k: draw(trees(depth=depth - 1)) for k in keys}
+
+
+@st.composite
+def patterns(draw):
+    parts = [draw(st.sampled_from(_NAMES + ("*",)))
+             for _ in range(draw(st.integers(1, 3)))]
+    if draw(st.booleans()):
+        parts.append("**")
+    return "/".join(parts)
+
+
+@st.composite
+def policies(draw):
+    rules = []
+    for pat in draw(st.lists(patterns(), max_size=4, unique=True)):
+        rules.append(PolicyRule(pat, draw(st.sampled_from(_SPECS))))
+    rules.append(PolicyRule("**", draw(st.sampled_from(_SPECS))))
+    try:
+        return TransferPolicy(tuple(rules))
+    except UnsupportedPolicyError:
+        hyp.assume(False)  # e.g. a drawn pattern canonicalizes to '**'
+
+
+@settings(max_examples=200, deadline=None)
+@given(policies())
+def test_parse_str_roundtrip(policy):
+    assert TransferPolicy.parse(str(policy)) == policy
+    assert str(TransferPolicy.parse(str(policy))) == str(policy)
+
+
+@settings(max_examples=150, deadline=None)
+@given(trees(), policies())
+def test_every_leaf_matched_exactly_once(tree, policy):
+    regions = partition_tree(tree, policy)
+    n = len(leaf_paths(tree))
+    covered = sorted(i for r in regions.values() for i in r.indices)
+    assert covered == list(range(n))
+    # and each region's rule really matches each of its paths
+    for region in regions.values():
+        for p in region.paths:
+            assert region.rule.matches(p)
+
+
+@settings(max_examples=150, deadline=None)
+@given(trees(), policies())
+def test_most_specific_rule_wins(tree, policy):
+    """Adding an exact rule for one leaf path always captures that leaf,
+    whatever less-specific rules surround it."""
+    paths = leaf_paths(tree)
+    if not paths:
+        return
+    target = str(paths[0]).replace(".", "/")
+    try:
+        rules = (PolicyRule(target, "marshal+align64"),) + policy.rules
+        stacked = TransferPolicy(rules)
+    except UnsupportedPolicyError:
+        hyp.assume(False)
+    assert stacked.match(paths[0]).pattern == rules[0].pattern
+
+
+@settings(max_examples=100, deadline=None)
+@given(trees(), policies())
+def test_partition_deterministic_across_treedef_equal_trees(tree, policy):
+    clone = jax.tree_util.tree_map(lambda l: l * 0 + 7.0, tree)
+    a = partition_tree(tree, policy)
+    b = partition_tree(clone, policy)
+    assert {k: r.indices for k, r in a.items()} == \
+        {k: r.indices for k, r in b.items()}

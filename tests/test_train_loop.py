@@ -56,6 +56,42 @@ def test_checkpoint_restart_is_bit_identical(setup, tmp_path):
     assert int(res_a.state["step"]) == int(res_b.state["step"]) == 12
 
 
+def test_restore_via_state_policy_matches_default(setup, tmp_path):
+    """Restoring through the compiled state TransferProgram (params arena +
+    delta opt state + marshalled metadata, one sync) resumes the exact same
+    trajectory as the per-leaf jnp.asarray restore path."""
+    from repro.runtime.train import state_transfer_policy
+
+    api, opt, step, data = setup
+    init = lambda: train_state(api, opt, jax.random.PRNGKey(4))
+    res_a = run(step, init, lambda s: data.batch(s), num_steps=12)
+    boom = {"armed": True}
+
+    def injector(s):
+        if s == 9 and boom["armed"]:
+            boom["armed"] = False
+            raise NodeFailure("simulated pod loss")
+
+    res_b = run(step, init, lambda s: data.batch(s), num_steps=12,
+                ckpt_dir=str(tmp_path / "ckp"), ckpt_every=4,
+                failure_injector=injector,
+                state_policy=state_transfer_policy())
+    assert res_b.restarts == 1
+    np.testing.assert_allclose(
+        np.asarray(res_a.state["params"]["final_norm"]["scale"]),
+        np.asarray(res_b.state["params"]["final_norm"]["scale"]),
+        rtol=1e-6, atol=1e-6)
+    assert int(res_b.state["step"]) == 12
+
+
+def test_state_policy_and_shardings_are_exclusive(setup):
+    api, opt, step, data = setup
+    with pytest.raises(ValueError, match="exclusive"):
+        run(step, lambda: train_state(api, opt, jax.random.PRNGKey(0)),
+            lambda s: data.batch(s), num_steps=1,
+            state_shardings={}, state_policy="**=marshal")
+
+
 def test_too_many_failures_raises(setup, tmp_path):
     api, opt, step, data = setup
 
