@@ -21,10 +21,21 @@ current-schema rows.
                   program rows, "" for plain spec rows), region_ledgers
                   (region pattern -> per-region first-pass ledger dict),
                   steady_region_ledgers (same keys, one warm program pass)
+  v5              + overlap_wall_us (warm PIPELINED pass: caller-visible
+                  wall, begin + residual sync + finish), sync_offload_us
+                  (barrier time the pipelined pass kept off the caller's
+                  thread: overlap_s - sync_s), finish_us (post-barrier
+                  bookkeeping wall), ckpt_stall_us (train-loop rows only:
+                  caller-visible cost of one zero-stall checkpoint save)
 
 The ledger-derived column defaults come from ``TransferLedger().as_dict()``
 rather than a hand-maintained list, so a ledger field added upstream
 becomes a schema column (with its zero default) in one place.
+
+Run ``python -m benchmarks.bench_schema --gate old.json new.json`` to use
+:func:`compare` as a CI regression gate: it joins the freshly emitted rows
+against the committed baseline and FAILS (exit 1) on any steady-wall
+regression beyond the threshold (default 1.5x).
 """
 from __future__ import annotations
 
@@ -33,7 +44,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import TransferLedger
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 # the ledger fields that are persisted per row, with the ledger's own
 # zero-state as their defaults (timings are reported as *_us columns
@@ -70,6 +81,13 @@ V4_DEFAULTS: Dict[str, Any] = {
     "steady_region_ledgers": {},   # region pattern -> warm-pass ledger dict
 }
 
+V5_DEFAULTS: Dict[str, Any] = {
+    "overlap_wall_us": None,   # warm pipelined pass: caller-visible wall
+    "sync_offload_us": None,   # barrier time kept off the caller's thread
+    "finish_us": None,         # post-barrier bookkeeping wall (warm pass)
+    "ckpt_stall_us": None,     # train-loop rows: one zero-stall save's cost
+}
+
 
 def upgrade_row(row: Dict[str, Any]) -> Dict[str, Any]:
     """Lift a row of ANY past schema to SCHEMA_VERSION (old rows parse)."""
@@ -78,7 +96,7 @@ def upgrade_row(row: Dict[str, Any]) -> Dict[str, Any]:
         raise ValueError(f"row schema {version} is newer than this reader "
                          f"({SCHEMA_VERSION}); update benchmarks/bench_schema.py")
     out = dict(row)
-    for defaults in (V2_DEFAULTS, V3_DEFAULTS, V4_DEFAULTS):
+    for defaults in (V2_DEFAULTS, V3_DEFAULTS, V4_DEFAULTS, V5_DEFAULTS):
         for key, default in defaults.items():
             out.setdefault(key, dict(default) if isinstance(default, dict)
                            else default)
@@ -121,3 +139,68 @@ def compare(old_rows: List[Dict[str, Any]], new_rows: List[Dict[str, Any]],
                     f"old_{column}": va, f"new_{column}": vb,
                     "speedup": round(ratio, 2) if ratio else None})
     return out
+
+
+def gate(old_rows: List[Dict[str, Any]], new_rows: List[Dict[str, Any]],
+         threshold: float = 1.5) -> List[Dict[str, Any]]:
+    """The CI regression gate: every row whose steady-state wall regressed
+    beyond ``threshold`` (new > old * threshold).  Each row pair gates on
+    ``steady_wall_us`` where both sides have it (warm passes), falling back
+    to ``cached_wall_us`` (cold-cache rows and pre-v2 baselines); rows
+    present on only one side never gate — adding or retiring a scenario is
+    not a regression."""
+    old = {row_key(r): upgrade_row(r) for r in old_rows}
+    new = {row_key(r): upgrade_row(r) for r in new_rows}
+    failures: List[Dict[str, Any]] = []
+    for key in sorted(set(old) & set(new)):
+        a, b = old[key], new[key]
+        for column in ("steady_wall_us", "cached_wall_us"):
+            va, vb = a.get(column), b.get(column)
+            if not va or not vb:
+                continue
+            if vb > va * threshold:
+                failures.append({
+                    "scenario": key[0], "scheme": key[1], "policy": key[2],
+                    "column": column, "old_us": va, "new_us": vb,
+                    "ratio": round(vb / va, 2), "threshold": threshold})
+            break  # gate each row on its best available column only
+    return failures
+
+
+def _main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_transfer.json row sets; --gate fails "
+                    "the build on steady-wall regression")
+    ap.add_argument("old", help="baseline rows (committed BENCH_transfer.json)")
+    ap.add_argument("new", help="freshly emitted rows")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 if any row regressed past --threshold")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="regression ratio that fails the gate (default 1.5)")
+    ap.add_argument("--column", default="cached_wall_us",
+                    help="column for the plain (non-gate) diff report")
+    args = ap.parse_args(argv)
+    old_rows, new_rows = load_rows(args.old), load_rows(args.new)
+    if args.gate:
+        failures = gate(old_rows, new_rows, threshold=args.threshold)
+        if failures:
+            print(f"PERF GATE FAILED: {len(failures)} row(s) regressed "
+                  f">{args.threshold}x")
+            for f in failures:
+                name = "/".join(p for p in
+                                (f["scenario"], f["scheme"], f["policy"]) if p)
+                print(f"  {name}: {f['column']} {f['old_us']:.1f} -> "
+                      f"{f['new_us']:.1f} us ({f['ratio']}x)")
+            return 1
+        print(f"perf gate passed (threshold {args.threshold}x, "
+              f"{len(new_rows)} fresh rows)")
+        return 0
+    for cell in compare(old_rows, new_rows, column=args.column):
+        print(cell)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

@@ -9,6 +9,7 @@ Sections (paper artifact -> module):
     linear              §4.1 / Figs. 5-6         benchmarks.linear_scenario
     dense               §4.2 / Fig. 7            benchmarks.dense_scenario
     transfer            registry x scheme steady state benchmarks.transfer_steady
+    transfer_overlap    pipelined executor overlap     benchmarks.transfer_overlap
     instructions        §6.3 / Tables 3-4        benchmarks.instruction_count
     marshal_kernel      Alg. 1 as a TPU kernel   benchmarks (inline)
     checkpoint          marshalled ckpt I/O      benchmarks.checkpoint_bench
@@ -17,13 +18,15 @@ Sections (paper artifact -> module):
 
 The transfer section iterates the full ``repro.scenarios`` registry and
 writes ``BENCH_transfer.json`` (repo root) in the schema-versioned row
-format of ``benchmarks.bench_schema`` (v4): TransferSpec x scenario x
+format of ``benchmarks.bench_schema`` (v5): TransferSpec x scenario x
 {spec, first_wall_us, cached_wall_us, h2d_bytes, h2d_calls, enqueue_us,
 sync_us, skipped_bytes, delta_calls, sharded, n_devices, per_device_*,
 *_by_device, steady_*} plus one PROGRAM row per scenario policy ({policy,
-region_ledgers, steady_region_ledgers}) — the machine-readable perf
-trajectory (compare across PRs with ``scripts/update_experiments.py
---transfer --old prev.json``; old-schema rows still parse).  ``--smoke``
+region_ledgers, steady_region_ledgers, overlap_wall_us, sync_offload_us,
+finish_us}) — the machine-readable perf trajectory (compare across PRs
+with ``scripts/update_experiments.py --transfer --old prev.json``, gate
+regressions with ``python -m benchmarks.bench_schema old new --gate``;
+old-schema rows still parse).  ``--smoke``
 runs ONLY the registry sweep at tiny sizes (benchmarks.smoke), including
 the steady-state delta contracts of the steady_reuse/sharded_delta
 families and every scenario's declared policy program, and fails on any
@@ -33,7 +36,9 @@ value- or data-motion-check mismatch: the CI harness-breakage canary.
 specs; ``--policy`` (repeatable policy strings, e.g.
 ``'params/**=marshal+delta@dp8; **=marshal'``) compiles each into a
 TransferProgram over every scenario tree and enforces the per-region
-ledger contracts.
+ledger contracts.  ``--async`` additionally drives every policy program
+through the PIPELINED executor (``to_device_async``) in the smoke sweep —
+same trees, same per-region contracts, async==sync enforced as a failure.
 """
 from __future__ import annotations
 
@@ -62,6 +67,9 @@ def main(argv=None) -> None:
                          "e.g. 'params/**=marshal+delta@dp8; **=marshal' — "
                          "compiled into a TransferProgram over every "
                          "scenario tree in the smoke/transfer sweeps")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="smoke: drive every policy program through the "
+                         "pipelined executor too (async==sync enforced)")
     ap.add_argument("--skip", default="",
                     help="comma-separated section names to skip")
     args = ap.parse_args(argv)
@@ -73,7 +81,7 @@ def main(argv=None) -> None:
     if args.smoke:
         _section("scenario registry smoke (all scenarios x all specs)")
         from . import smoke
-        smoke.run(specs=specs, policies=policies)
+        smoke.run(specs=specs, policies=policies, async_executor=args.async_)
         print(f"\n[benchmarks.run] done in {time.time() - t0:.1f}s")
         return
 
@@ -111,6 +119,15 @@ def main(argv=None) -> None:
                             repeats=3 if args.quick else 5,
                             json_path=json_path, specs=specs,
                             policies=policies)
+
+    if "transfer_overlap" not in skip:
+        _section("transfer overlap (pipelined executor, zero-stall ckpt)")
+        from . import transfer_overlap
+        json_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_overlap.json")
+        transfer_overlap.run(quick=args.quick,
+                             repeats=3 if args.quick else 5,
+                             json_path=json_path)
 
     if "instructions" not in skip:
         _section("instruction count (Tables 3-4)")

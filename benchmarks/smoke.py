@@ -19,6 +19,11 @@ own declared policy runs regardless) and driven cold + warm, with the
 per-region three-way motion check (closed form == structural derivation
 == region ledger), ONE sync per pass, and — for delta regions — the exact
 per-device complement, all enforced as failures.
+
+``--async`` (``async_executor=True``) runs every policy program a second
+time through the PIPELINED executor (``to_device_async(...).result()``)
+under the same contracts — the CI leg that keeps async==sync honest on
+the forced-multi-device host.
 """
 from __future__ import annotations
 
@@ -37,10 +42,12 @@ def _steady_capable(sc) -> bool:
 
 def run(out=sys.stdout, size: str = "smoke",
         specs: Optional[Sequence[str]] = None,
-        policies: Optional[Sequence[str]] = None) -> List[dict]:
+        policies: Optional[Sequence[str]] = None,
+        async_executor: bool = False) -> List[dict]:
     requested = [TransferSpec.parse(s) for s in specs] if specs else None
     req_policies = [TransferPolicy.parse(p) for p in policies] if policies \
         else []
+    executors = ("blocking", "async") if async_executor else ("blocking",)
     rows: List[dict] = []
     failures: List[str] = []
     print("scenario,spec,wall_us,h2d_bytes,h2d_calls,check,motion", file=out)
@@ -54,25 +61,28 @@ def run(out=sys.stdout, size: str = "smoke",
         own = [sc.policy()] if sc.declared_policy else []
         for pol in {str(p): p for p in own + req_policies}.values():
             npass = 3 if _steady_capable(sc) else 2
-            for i, m in enumerate(run_policy_scenario(sc, pol, tree=tree,
-                                                      passes=npass)):
-                rows.append(dict(scenario=sc.name, spec=str(pol),
-                                 scheme=f"policy/pass{i}",
-                                 wall_us=round(m.wall_us, 1),
-                                 h2d_bytes=m.h2d_bytes,
-                                 h2d_calls=m.h2d_calls,
-                                 ok=m.ok, motion_ok=m.motion_ok))
-                print(f"{sc.name},policy[{pol}]/pass{i},{m.wall_us:.1f},"
-                      f"{m.h2d_bytes},{m.h2d_calls},"
-                      f"{'ok' if m.ok else 'FAIL'},"
-                      f"{'ok' if m.motion_ok else 'FAIL'}", file=out)
-                if not m.ok:
-                    failures.append(f"{sc.name}/policy[{pol}]/pass{i}: "
-                                    "value check failed")
-                if not m.motion_ok:
-                    failures.append(
-                        f"{sc.name}/policy[{pol}]/pass{i}: per-region "
-                        f"motion broke the ledger contract ({m.regions})")
+            for executor in executors:
+                tag = f"policy/{executor}" if async_executor else "policy"
+                for i, m in enumerate(run_policy_scenario(
+                        sc, pol, tree=tree, passes=npass,
+                        executor=executor)):
+                    rows.append(dict(scenario=sc.name, spec=str(pol),
+                                     scheme=f"{tag}/pass{i}",
+                                     wall_us=round(m.wall_us, 1),
+                                     h2d_bytes=m.h2d_bytes,
+                                     h2d_calls=m.h2d_calls,
+                                     ok=m.ok, motion_ok=m.motion_ok))
+                    print(f"{sc.name},{tag}[{pol}]/pass{i},{m.wall_us:.1f},"
+                          f"{m.h2d_bytes},{m.h2d_calls},"
+                          f"{'ok' if m.ok else 'FAIL'},"
+                          f"{'ok' if m.motion_ok else 'FAIL'}", file=out)
+                    if not m.ok:
+                        failures.append(f"{sc.name}/{tag}[{pol}]/pass{i}: "
+                                        "value check failed")
+                    if not m.motion_ok:
+                        failures.append(
+                            f"{sc.name}/{tag}[{pol}]/pass{i}: per-region "
+                            f"motion broke the ledger contract ({m.regions})")
         for spec in sc.specs():
             if requested is not None and not any(
                     str(spec) == str(r) or spec.name == str(r)

@@ -17,10 +17,14 @@ declared path-scoped ``TransferPolicy`` and any ``--policy`` requests):
 cold + warm ``TransferProgram`` passes with the per-region ledgers
 persisted — and (via ``benchmarks.run``) persists the rows to
 ``BENCH_transfer.json`` in the schema-versioned format of
-``benchmarks.bench_schema`` (v4: rows carry the canonical ``spec`` string,
-the per-device ledger maps, and for program rows the ``policy`` string +
-``region_ledgers``/``steady_region_ledgers`` maps) so the perf trajectory
-stays machine-comparable across PRs.
+``benchmarks.bench_schema`` (v5: rows carry the canonical ``spec`` string,
+the per-device ledger maps, for program rows the ``policy`` string +
+``region_ledgers``/``steady_region_ledgers`` maps, and the pipelined
+executor's ``overlap_wall_us``/``sync_offload_us``/``finish_us`` columns)
+so the perf trajectory stays machine-comparable across PRs.  Program rows
+additionally assert the wall-split identity ``wall_s == enqueue_s +
+sync_s + finish_s`` per region — the attribution fix that keeps overlap
+from double-counting barrier time.
 
 Every row's first-pass ``h2d_bytes``/``h2d_calls`` (and per-device split,
 when sharded) is asserted against the scenario's analytic expectation
@@ -110,17 +114,48 @@ def _merge_region_dicts(regions: dict) -> dict:
     return out
 
 
+def _assert_wall_split(sc: Scenario, policy: TransferPolicy,
+                       regions: dict, m) -> None:
+    """The schema-v5 attribution identity: the wall splits of one pass sum
+    to the measured wall — ``wall_s == enqueue_s + sync_s + finish_s`` on
+    every region ledger, with the program-level finish/overlap booked on
+    top, never double-counted into the caller-visible wall."""
+    for key, led in regions.items():
+        total = led["enqueue_s"] + led["sync_s"] + led["finish_s"]
+        assert abs(led["wall_s"] - total) < 1e-9, (
+            f"{sc.name}/{policy}[{key}]: ledger wall {led['wall_s']} != "
+            f"enqueue {led['enqueue_s']} + sync {led['sync_s']} + finish "
+            f"{led['finish_s']} — double-counted attribution")
+    # program level: the splits can never exceed the measured pass wall
+    # (they are a decomposition of it, not independent timers)
+    split_us = sum(led["wall_s"] for led in regions.values()) * 1e6 \
+        + m.finish_us
+    assert split_us <= m.wall_us * 1.001 + 50.0, (
+        f"{sc.name}/{policy}: wall splits ({split_us:.1f}us) exceed the "
+        f"measured pass wall ({m.wall_us:.1f}us)")
+
+
 def _policy_row(sc: Scenario, tree: Any, policy: TransferPolicy,
                 repeats: int) -> dict:
-    """One schema-v4 program row: cold + warm TransferProgram passes under
+    """One schema-v5 program row: cold + warm TransferProgram passes under
     ``policy`` with the per-region three-way motion check enforced (closed
     form == structural derivation == region ledger, see
-    ``run_policy_scenario``)."""
+    ``run_policy_scenario``), plus warm PIPELINED passes for the overlap
+    columns (``overlap_wall_us``/``sync_offload_us``/``finish_us``)."""
     ms = run_policy_scenario(sc, policy, tree=tree, passes=1 + repeats)
     assert all(m.ok and m.motion_ok for m in ms), (
         f"{sc.name}/{policy}: program pass broke its per-region ledger "
         f"contract: {[(m.ok, m.motion_ok) for m in ms]}")
     cold, warm = ms[0], min(ms[1:], key=lambda m: m.wall_us)
+    _assert_wall_split(sc, policy, warm.regions, warm)
+    # the pipelined executor over the same scenario: identical motion
+    # contracts enforced, caller-visible wall + offloaded sync recorded
+    ams = run_policy_scenario(sc, policy, tree=tree, passes=1 + repeats,
+                              executor="async")
+    assert all(m.ok and m.motion_ok for m in ams), (
+        f"{sc.name}/{policy}: PIPELINED pass broke its per-region ledger "
+        f"contract: {[(m.ok, m.motion_ok) for m in ams]}")
+    awarm = min(ams[1:], key=lambda m: m.wall_us)
     totals = _merge_region_dicts(cold.regions)
     row = dict(schema=SCHEMA_VERSION,
                scenario=sc.name, family=sc.family, scheme="policy",
@@ -137,7 +172,10 @@ def _policy_row(sc: Scenario, tree: Any, policy: TransferPolicy,
                steady_region_ledgers=warm.regions,
                steady_wall_us=round(warm.wall_us, 1),
                steady_h2d_bytes=warm.h2d_bytes,
-               steady_skipped_bytes=warm.skipped_bytes)
+               steady_skipped_bytes=warm.skipped_bytes,
+               overlap_wall_us=round(awarm.wall_us, 1),
+               sync_offload_us=round(awarm.offload_us, 1),
+               finish_us=round(awarm.finish_us, 1))
     row.update(totals)
     return upgrade_row(row)
 

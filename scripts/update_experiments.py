@@ -69,16 +69,24 @@ def transfer_main(json_path: str, old_path: str = None) -> None:
 
     rows = bench_schema.load_rows(json_path)
     lines = ["| scenario | spec / policy | cached µs | h2d bytes | calls | "
-             "skipped | devices | steady µs | per-region h2d (cold→steady) |",
-             "|---|---|---|---|---|---|---|---|---|"]
+             "skipped | devices | steady µs | async µs (offload) | "
+             "per-region h2d (cold→steady) |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
     for r in rows:
+        # v5 pipelined-executor columns (policy rows only): the warm async
+        # pass wall and how much barrier ran off the caller's thread
+        overlap = ""
+        if r.get("overlap_wall_us") is not None:
+            overlap = f"{r['overlap_wall_us']}"
+            if r.get("sync_offload_us") is not None:
+                overlap += f" ({r['sync_offload_us']})"
         lines.append(
             f"| {r['scenario']} | "
             f"{r['policy'] or r['spec'] or r['scheme']} | "
             f"{r['cached_wall_us']} | "
             f"{r['h2d_bytes']} | {r['h2d_calls']} | {r['skipped_bytes']} | "
             f"{r['n_devices']} | {r['steady_wall_us'] or ''} | "
-            f"{_region_summary(r)} |")
+            f"{overlap} | {_region_summary(r)} |")
     body = (f"### Steady-state transfers (schema "
             f"v{bench_schema.SCHEMA_VERSION}, {len(rows)} rows)\n\n"
             + "\n".join(lines))

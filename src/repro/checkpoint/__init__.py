@@ -1,5 +1,5 @@
-from .ckpt import (AsyncCheckpointer, available_steps, latest_step, load,
-                   restore, save, selective_restore)
+from .ckpt import (AsyncCheckpointer, SnapshotArena, available_steps,
+                   latest_step, load, restore, save, selective_restore)
 
-__all__ = ["AsyncCheckpointer", "available_steps", "latest_step", "load",
-           "restore", "save", "selective_restore"]
+__all__ = ["AsyncCheckpointer", "SnapshotArena", "available_steps",
+           "latest_step", "load", "restore", "save", "selective_restore"]

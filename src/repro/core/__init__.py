@@ -8,7 +8,8 @@ from .treepath import TreePath, leaf_paths, leaf_items, max_chain_depth
 from .chainref import (ChainRef, ShardSlice, declare, extract, insert, region,
                        chain_call, chain_jit, resolve_shards)
 from .arena import (ArenaLayout, LeafSlot, plan, pack, unpack, repack_into,
-                    shard_ranges, datasize_linear, datasize_dense)
+                    alloc_buffers, pack_into, shard_ranges, datasize_linear,
+                    datasize_dense)
 from .engine import (ArenaEntry, DeltaState, TransferSession, cached_plan,
                      get_entry, get_session, pack_traced, unpack_traced,
                      repack_traced, cache_stats, clear_cache,
@@ -17,9 +18,9 @@ from .spec import PAPER_SPECS, TransferSpec, UnsupportedSpecError
 from .schemes import (TransferLedger, TransferScheme, UVMScheme, MarshalScheme,
                       PointerChainScheme, SCHEMES, make_scheme,
                       transfer_scheme)
-from .policy import (PolicyRule, ProgramStats, Region, TransferPolicy,
-                     TransferProgram, UnsupportedPolicyError, compile_program,
-                     partition_tree)
+from .policy import (PolicyRule, ProgramFuture, ProgramStats, Region,
+                     TransferPolicy, TransferProgram, UnsupportedPolicyError,
+                     compile_program, partition_tree)
 from .deepcopy import (full_deepcopy, selective_deepcopy, host_skeleton,
                        tree_bytes)
 
@@ -28,7 +29,8 @@ __all__ = [
     "ChainRef", "ShardSlice", "declare", "extract", "insert", "region",
     "chain_call", "chain_jit", "resolve_shards",
     "ArenaLayout", "LeafSlot", "plan", "pack", "unpack", "repack_into",
-    "shard_ranges", "datasize_linear", "datasize_dense",
+    "alloc_buffers", "pack_into", "shard_ranges", "datasize_linear",
+    "datasize_dense",
     "ArenaEntry", "DeltaState", "TransferSession", "cached_plan", "get_entry",
     "get_session", "pack_traced", "unpack_traced",
     "repack_traced", "cache_stats", "clear_cache", "set_cache_limits",
@@ -36,7 +38,7 @@ __all__ = [
     "PAPER_SPECS", "TransferSpec", "UnsupportedSpecError",
     "TransferLedger", "TransferScheme", "UVMScheme", "MarshalScheme",
     "PointerChainScheme", "SCHEMES", "make_scheme", "transfer_scheme",
-    "PolicyRule", "ProgramStats", "Region", "TransferPolicy",
+    "PolicyRule", "ProgramFuture", "ProgramStats", "Region", "TransferPolicy",
     "TransferProgram", "UnsupportedPolicyError", "compile_program",
     "partition_tree",
     "full_deepcopy", "selective_deepcopy", "host_skeleton", "tree_bytes",

@@ -163,6 +163,32 @@ def unpack(buffers: Buffers, layout: ArenaLayout) -> Any:
     return jax.tree_util.tree_unflatten(layout.treedef, leaves)
 
 
+def alloc_buffers(layout: ArenaLayout) -> Buffers:
+    """Preallocate one zeroed host numpy buffer per dtype bucket.
+
+    The staging side of :func:`pack_into`: callers that snapshot repeatedly
+    (checkpoint arenas) allocate once per layout and re-fill in place.
+    """
+    return {b: np.zeros(n, np.dtype(b)) for b, n in layout.bucket_sizes.items()}
+
+
+def pack_into(buffers: Buffers, layout: ArenaLayout, tree: Any) -> Buffers:
+    """Marshal the tree into PREALLOCATED host bucket buffers, in place.
+
+    The numpy twin of :func:`repack_into` for the snapshot path: no
+    allocation, no concatenation — each leaf lands at its planned offset.
+    Alignment/tail padding bytes keep whatever the buffer already holds
+    (zeros from :func:`alloc_buffers`, or the previous snapshot's padding).
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    if len(leaves) != layout.num_leaves:
+        raise ValueError("tree does not match arena layout")
+    for leaf, slot in zip(leaves, layout.slots):
+        flat = np.reshape(np.asarray(leaf, dtype=slot.dtype), (-1,))
+        buffers[slot.bucket][slot.offset: slot.offset + slot.size] = flat
+    return buffers
+
+
 def repack_into(buffers: Buffers, layout: ArenaLayout, tree: Any) -> Buffers:
     """Functionally update the arena from a (possibly modified) tree.
 

@@ -47,8 +47,9 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 
@@ -302,15 +303,109 @@ def partition_tree(tree: Any, policy: Union[str, TransferPolicy]
 @dataclasses.dataclass
 class ProgramStats:
     """One ``to_device`` pass of a program: how many H2D copies each region
-    enqueued, and that the whole pass synchronized exactly once."""
+    enqueued, and that the whole pass synchronized exactly once.
+
+    The pipelined executor splits the barrier's attribution: ``sync_s`` is
+    what the CALLER waited (inside ``ProgramFuture.result()``), ``overlap_s``
+    is how long the barrier actually ran on the background thread — their
+    difference is the sync wall the pipeline moved off the critical path.
+    ``finish_s`` is the post-barrier bookkeeping (retained-state updates,
+    fused-gather dispatch), always on the caller's thread."""
 
     enqueues: Dict[str, int]
     syncs: int
     sync_s: float
+    overlap_s: float = 0.0
+    finish_s: float = 0.0
 
     @property
     def enqueue_total(self) -> int:
         return sum(self.enqueues.values())
+
+    @property
+    def offloaded_s(self) -> float:
+        """Sync wall the async executor kept off the caller's thread."""
+        return max(0.0, self.overlap_s - self.sync_s)
+
+
+class ProgramFuture:
+    """One in-flight asynchronous program pass.
+
+    Created by :meth:`TransferProgram.to_device_async` AFTER every region's
+    pack+enqueue ran on the caller's thread; the single
+    ``jax.block_until_ready`` over all regions' in-flight copies runs on a
+    background thread (``overlap_s``), so the caller's compute overlaps the
+    DMA.  :meth:`result` materializes the pass: it waits the barrier (the
+    residual wait is ``sync_s`` — zero when compute fully covered the DMA),
+    runs every region's ``finish()`` bookkeeping (``finish_s``) and returns
+    the staged device tree.  Ledger deltas and retained-state updates are
+    booked at finish, exactly as in the blocking executor, so the one-sync
+    and per-device complement invariants hold bit-for-bit.
+
+    Lifecycle: a program keeps at most ONE un-materialized future (the
+    bounded pipeline of DESIGN.md §10.2) — beginning any new pass first
+    materializes the in-flight one, which is what makes a later
+    ``pack_host`` rotation always find the fences its spare buffer needs.
+    ``result()`` is idempotent and thread-safe; the staged tree is memoized.
+    """
+
+    def __init__(self, program: "TransferProgram", leaves: List[Any],
+                 pending: List[Any], finishes: List[Tuple["Region", Any]],
+                 enqueues: Dict[str, int]):
+        self._program = program
+        self._leaves = leaves
+        self._pending = pending
+        self._finishes = finishes
+        self._enqueues = enqueues
+        self._synced = threading.Event()
+        self._overlap_s = 0.0
+        self._error: Optional[BaseException] = None
+        self._lock = threading.Lock()
+        self._materialized = False
+        self._result: Any = None
+
+        def _sync():
+            t0 = time.perf_counter()
+            try:
+                jax.block_until_ready(self._pending)
+            except BaseException as e:  # surfaced at result()
+                self._error = e
+            finally:
+                self._overlap_s = time.perf_counter() - t0
+                self._synced.set()
+
+        self._thread = threading.Thread(
+            target=_sync, name="transfer-program-sync", daemon=True)
+        self._thread.start()
+
+    def done(self) -> bool:
+        """True once the background barrier has completed (the pass is not
+        yet materialized — ``result()`` still runs the finish stage)."""
+        return self._synced.is_set()
+
+    def result(self) -> Any:
+        """Materialize the pass: residual barrier wait, per-region finish
+        bookkeeping, and the staged device tree (memoized)."""
+        with self._lock:
+            if self._materialized:
+                return self._result
+            t0 = time.perf_counter()
+            self._synced.wait()
+            sync_s = time.perf_counter() - t0
+            if self._error is not None:
+                raise self._error
+            t1 = time.perf_counter()
+            out = self._program._finish(self._leaves, self._finishes)
+            finish_s = time.perf_counter() - t1
+            self._program.last_stats = ProgramStats(
+                self._enqueues, 1, sync_s, self._overlap_s, finish_s)
+            self._result = out
+            self._materialized = True
+            if self._program._inflight is self:
+                self._program._inflight = None
+            # drop the staging references; the memoized tree is what lives
+            self._leaves = self._pending = self._finishes = None
+            return out
 
 
 class TransferProgram:
@@ -344,6 +439,9 @@ class TransferProgram:
             (key, transfer_scheme(region.spec, session))
             for key, region in regions.items())
         self.last_stats: Optional[ProgramStats] = None
+        # the bounded pipeline: at most one un-materialized async pass;
+        # beginning any new pass (or touching program state) drains it
+        self._inflight: Optional[ProgramFuture] = None
 
     # -- views ---------------------------------------------------------------
     def scheme(self, key: str):
@@ -358,20 +456,24 @@ class TransferProgram:
         return self._schemes[key].ledger
 
     def merged_ledger(self):
-        """One ledger summing every region's (plus this program's sync
-        wall) — the whole-pass data-motion picture."""
+        """One ledger summing every region's (plus this program's barrier
+        attribution: caller sync, background overlap, finish bookkeeping) —
+        the whole-pass data-motion picture."""
         from .schemes import TransferLedger
 
         out = TransferLedger().merge(*[s.ledger
                                        for s in self._schemes.values()])
         if self.last_stats is not None:
             out.record_wall(0.0, self.last_stats.sync_s)
+            out.record_overlap(self.last_stats.overlap_s)
+            out.record_finish(self.last_stats.finish_s)
         return out
 
     def region_of(self, path: Union[str, TreePath]) -> str:
         return self.policy.match(path).pattern
 
     def reset_ledgers(self) -> None:
+        self.drain()
         for s in self._schemes.values():
             s.ledger.reset()
 
@@ -384,12 +486,24 @@ class TransferProgram:
                 f"compiled for {self.treedef}")
         return leaves
 
-    def to_device(self, tree: Any) -> Any:
-        """One program pass: enqueue all regions' buckets, ONE sync, finish.
+    def drain(self) -> Optional[Any]:
+        """Materialize the in-flight async pass, if any (returns its tree).
 
-        Each region moves its leaves under its own spec (delta regions ship
-        only dirty buckets/shards; uvm regions wrap lazily and fault later,
-        contributing zero enqueues here)."""
+        Every entry point that stages or mutates program state calls this
+        first: the depth-1 pipeline guarantees a pass's finish bookkeeping —
+        including the fences its DMA sources register on their staging
+        buffers — has run before any later pack can rotate onto them
+        (write-after-enqueue safety, DESIGN.md §10.2)."""
+        fut, self._inflight = self._inflight, None
+        return fut.result() if fut is not None else None
+
+    def _begin(self, tree: Any) -> Tuple[List[Any], List[Any],
+                                         List[Tuple[Region, Any]],
+                                         Dict[str, int]]:
+        """The begin stage of one pass: every region packs + enqueues (no
+        sync) in declaration order — region N+1's pack overlaps region N's
+        already-in-flight DMA."""
+        self.drain()
         leaves = self._flatten(tree)
         pending_all: List[Any] = []
         finishes: List[Tuple[Region, Any]] = []
@@ -400,21 +514,57 @@ class TransferProgram:
             enqueues[key] = len(pending)
             pending_all.extend(pending)
             finishes.append((region, finish))
-        t0 = time.perf_counter()
-        jax.block_until_ready(pending_all)
-        sync_s = time.perf_counter() - t0
+        return leaves, pending_all, finishes, enqueues
+
+    def _finish(self, leaves: List[Any],
+                finishes: List[Tuple[Region, Any]]) -> Any:
+        """The finish stage: per-region bookkeeping (ledgers, retained
+        buckets, staging fences) + tree assembly, after the barrier."""
         out = list(leaves)
         for region, finish in finishes:
             for i, leaf in zip(region.indices,
                                jax.tree_util.tree_leaves(
                                    finish(), is_leaf=_is_opaque_leaf)):
                 out[i] = leaf
-        self.last_stats = ProgramStats(enqueues, 1, sync_s)
         return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def to_device(self, tree: Any) -> Any:
+        """One blocking program pass: enqueue all regions' buckets, ONE
+        sync, finish.
+
+        Each region moves its leaves under its own spec (delta regions ship
+        only dirty buckets/shards; uvm regions wrap lazily and fault later,
+        contributing zero enqueues here)."""
+        leaves, pending_all, finishes, enqueues = self._begin(tree)
+        t0 = time.perf_counter()
+        jax.block_until_ready(pending_all)
+        t1 = time.perf_counter()
+        out = self._finish(leaves, finishes)
+        t2 = time.perf_counter()
+        self.last_stats = ProgramStats(enqueues, 1, t1 - t0,
+                                       finish_s=t2 - t1)
+        return out
+
+    def to_device_async(self, tree: Any) -> ProgramFuture:
+        """The pipelined pass: pack + enqueue every region NOW (on the
+        caller's thread, overlapping any prior in-flight DMA), move the
+        single sync to a background thread, and return a
+        :class:`ProgramFuture` whose ``result()`` materializes the tree.
+
+        Identical data motion and ledger accounting to :meth:`to_device` —
+        verified pass-for-pass by the differential harness — but the
+        caller's compute between ``to_device_async`` and ``result()``
+        overlaps the DMA: the barrier the blocking executor charges to
+        ``sync_s`` runs as ``overlap_s`` off the critical path."""
+        leaves, pending_all, finishes, enqueues = self._begin(tree)
+        fut = ProgramFuture(self, leaves, pending_all, finishes, enqueues)
+        self._inflight = fut
+        return fut
 
     def from_device(self, device_tree: Any, host_tree: Any) -> Any:
         """D2H per region under each region's spec (demarshal / selective
         fetch / demand fetch)."""
+        self.drain()
         dev_leaves = self._flatten(device_tree)
         host_leaves = self._flatten(host_tree)
         out = list(host_leaves)
@@ -430,7 +580,9 @@ class TransferProgram:
         """Delta API for in-place host mutators: flag the buckets under
         ``paths`` (all delta regions' buckets if none given) in every delta
         region holding leaves below them — an interior path's leaves may
-        span several regions."""
+        span several regions.  Drains any in-flight pass first: a mutation
+        racing an enqueued-but-unsynced copy must fence, not corrupt."""
+        self.drain()
         leaves = self._flatten(tree)
         roots = [str(TreePath.parse(p)) for p in paths]
         for key, region in self.regions.items():
@@ -453,6 +605,7 @@ class TransferProgram:
         delta state (retained buckets + memoized unpacks), entry references
         (staging buffers + their fences), and the region ledgers' counters.
         The program stays usable — the next pass is cold."""
+        self.drain()
         for scheme in self._schemes.values():
             state = getattr(scheme, "_delta_state", None)
             if state is not None:

@@ -46,10 +46,21 @@ def _nbytes(x: Any) -> int:
 class TransferLedger:
     """Counts H2D/D2H traffic: the paper's implicit metric made explicit.
 
-    ``wall_s`` is total transfer time, split into ``enqueue_s`` (issuing the
-    async copies) and ``sync_s`` (the barrier / fence waits) so batching
-    overlap is measurable: a fully serialized path has enqueue ≈ 0 and
-    sync ≈ wall.
+    ``wall_s`` is total CALLER-VISIBLE transfer time, split into
+    ``enqueue_s`` (issuing the async copies), ``sync_s`` (time the caller
+    thread spent blocked in a barrier / fence wait) and ``finish_s``
+    (post-barrier bookkeeping: retained-state updates, gather dispatch) so
+    batching overlap is measurable: a fully serialized path has enqueue ≈ 0
+    and sync ≈ wall, and the identity ``wall_s == enqueue_s + sync_s +
+    finish_s`` holds exactly by construction.
+
+    ``overlap_s`` is the async executor's fourth attribution: time a
+    barrier spent OFF the caller's thread (the background sync of a
+    :class:`~repro.core.policy.ProgramFuture`).  It is deliberately NOT
+    part of ``wall_s`` — counting the same barrier both where it ran
+    (background) and where the caller waited for it (``sync_s`` inside
+    ``result()``) would double-count under overlap and make the wall
+    splits sum past the measured wall.
 
     Delta accounting (invariant 4 stays exact): ``h2d_bytes``/``h2d_calls``
     record only bytes that actually moved; ``skipped_bytes`` records bytes a
@@ -70,6 +81,8 @@ class TransferLedger:
     wall_s: float = 0.0
     enqueue_s: float = 0.0
     sync_s: float = 0.0
+    overlap_s: float = 0.0   # barrier time spent off the caller's thread
+    finish_s: float = 0.0    # post-barrier bookkeeping on the caller's thread
     skipped_bytes: int = 0   # delta: bytes proven unchanged, not re-shipped
     delta_calls: int = 0     # transfer passes that skipped >=1 clean bucket
     h2d_bytes_by_device: Dict[str, int] = dataclasses.field(default_factory=dict)
@@ -106,6 +119,15 @@ class TransferLedger:
         self.sync_s += sync_s
         self.wall_s += enqueue_s + sync_s
 
+    def record_overlap(self, overlap_s: float) -> None:
+        """Barrier time that ran on a background thread — attributed, but
+        NOT added to ``wall_s`` (the caller never waited for it here)."""
+        self.overlap_s += overlap_s
+
+    def record_finish(self, finish_s: float) -> None:
+        self.finish_s += finish_s
+        self.wall_s += finish_s
+
     def per_device(self) -> Dict[str, Tuple[int, int]]:
         """{device id: (h2d_bytes, h2d_calls)} for sharded assertions."""
         return {d: (self.h2d_bytes_by_device[d],
@@ -130,6 +152,8 @@ class TransferLedger:
             self.skipped_bytes += o.skipped_bytes
             self.delta_calls += o.delta_calls
             self.record_wall(o.enqueue_s, o.sync_s)
+            self.record_overlap(o.overlap_s)
+            self.record_finish(o.finish_s)
             for field in ("h2d_bytes_by_device", "h2d_calls_by_device",
                           "skipped_bytes_by_device"):
                 mine = getattr(self, field)
@@ -141,6 +165,7 @@ class TransferLedger:
         self.h2d_bytes = self.d2h_bytes = 0
         self.h2d_calls = self.d2h_calls = 0
         self.wall_s = self.enqueue_s = self.sync_s = 0.0
+        self.overlap_s = self.finish_s = 0.0
         self.skipped_bytes = self.delta_calls = 0
         self.h2d_bytes_by_device.clear()
         self.h2d_calls_by_device.clear()

@@ -1,9 +1,10 @@
 from .loop import NodeFailure, StragglerWatchdog, TrainLoopResult, run
 from .serve import Request, Server
-from .train import (abstract_train_state, init_error_state, make_dp_train_step,
-                    make_train_step, train_state, train_state_axes)
+from .train import (StatePrefetcher, abstract_train_state, init_error_state,
+                    make_dp_train_step, make_train_step, train_state,
+                    train_state_axes)
 
 __all__ = ["NodeFailure", "StragglerWatchdog", "TrainLoopResult", "run",
-           "Request", "Server", "abstract_train_state", "init_error_state",
-           "make_dp_train_step", "make_train_step", "train_state",
-           "train_state_axes"]
+           "Request", "Server", "StatePrefetcher", "abstract_train_state",
+           "init_error_state", "make_dp_train_step", "make_train_step",
+           "train_state", "train_state_axes"]

@@ -56,6 +56,8 @@ class TrainLoopResult:
     metrics_history: List[Dict[str, float]]
     restarts: int
     straggler_steps: List[int]
+    ckpt_stall_s: float = 0.0   # total caller-visible checkpoint save cost
+    ckpt_saves: int = 0
 
 
 def run(train_step: Callable, init_state_fn: Callable[[], Any],
@@ -93,11 +95,16 @@ def run(train_step: Callable, init_state_fn: Callable[[], Any],
                     # buckets that a later donated train step could have
                     # invalidated); the session's layout/entry caches make
                     # recompiling cheap, and the whole state still stages
-                    # behind ONE sync.
+                    # behind ONE sync — pipelined, so the H2D overlaps the
+                    # rest of the restart (checkpointer re-init, data
+                    # replay seek) until the first step materializes it.
                     from ..core import get_session
+                    from .train import StatePrefetcher
 
-                    host = get_session().compile(
-                        host, state_policy).to_device(host)
+                    prefetch = StatePrefetcher(
+                        get_session().compile(host, state_policy))
+                    prefetch.schedule(host)
+                    host = prefetch.take()
                 else:
                     host = jax.tree_util.tree_map(jax.numpy.asarray, host)
             return host, step0
@@ -122,7 +129,8 @@ def run(train_step: Callable, init_state_fn: Callable[[], Any],
                       f"({dt*1e3:.1f} ms)")
             step += 1
             if ckpt and step % ckpt_every == 0:
-                ckpt.save(state, step)
+                ckpt.save(state, step)  # zero-stall: enqueue-all + writer
+                rec["ckpt_stall_s"] = ckpt.last_stall_s
         except NodeFailure:
             restarts += 1
             if restarts > max_restarts:
@@ -134,4 +142,6 @@ def run(train_step: Callable, init_state_fn: Callable[[], Any],
     if ckpt:
         ckpt.save(state, step)
         ckpt.wait()
-    return TrainLoopResult(state, history, restarts, watchdog.flagged)
+    return TrainLoopResult(state, history, restarts, watchdog.flagged,
+                           ckpt_stall_s=(ckpt.stall_s if ckpt else 0.0),
+                           ckpt_saves=(ckpt.saves if ckpt else 0))

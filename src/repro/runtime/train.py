@@ -243,6 +243,49 @@ def compile_state_program(state: Dict[str, Any], dp_size: int = 1,
     return session.compile(state, state_transfer_policy(dp_size))
 
 
+class StatePrefetcher:
+    """Step-level state prefetch over a compiled TransferProgram.
+
+    The discipline ``data.pipeline.Prefetcher`` applies to batches, applied
+    to state motion: while step N's compute runs, :meth:`schedule` stages
+    step N+1's (dirty) host state through the arena's spare double-buffer —
+    pack + enqueue-all happen immediately on the caller's thread, the
+    single sync rides a background thread (``TransferProgram.
+    to_device_async``) — and :meth:`take` materializes the staged device
+    tree right when the step needs it.  With compute longer than the DMA,
+    ``take`` returns without waiting: the transfer left the critical path.
+
+    Delta regions keep their meaning: pass ``dirty_paths`` to re-ship only
+    the buckets a host-side mutator touched.  The program's depth-1
+    pipeline makes back-to-back schedules safe (the engine drains the
+    in-flight pass before re-packing a staging buffer)."""
+
+    def __init__(self, program):
+        self.program = program
+        self._future = None
+
+    @property
+    def scheduled(self) -> bool:
+        return self._future is not None
+
+    def schedule(self, host_state: Any, *dirty_paths: str):
+        """Begin staging ``host_state`` (only ``dirty_paths``' buckets for
+        delta regions, everything if none given); returns the future."""
+        if dirty_paths:
+            self.program.mark_dirty(host_state, *dirty_paths)
+        self._future = self.program.to_device_async(host_state)
+        return self._future
+
+    def take(self) -> Any:
+        """The staged device tree for the step about to run (waits only the
+        residual DMA, zero in steady state)."""
+        if self._future is None:
+            raise RuntimeError("StatePrefetcher.take() with nothing "
+                               "scheduled — call schedule() first")
+        future, self._future = self._future, None
+        return future.result()
+
+
 def init_error_state(api: ModelApi, compress: bool,
                      mesh=None) -> Dict[str, Any]:
     if not compress:

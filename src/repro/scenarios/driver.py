@@ -359,6 +359,10 @@ class PolicyMeasurement:
     regions: Dict[str, Dict[str, Any]] = dataclasses.field(
         default_factory=dict)     # region pattern -> ledger.as_dict()
     expected: Optional[Dict[str, Motion]] = None
+    executor: str = "blocking"    # which executor ran the pass
+    overlap_us: float = 0.0       # async: barrier wall on the bg thread
+    offload_us: float = 0.0       # async: sync wall kept off the caller
+    finish_us: float = 0.0        # post-barrier bookkeeping wall
 
 
 def _region_motion_ok(scheme, ledger, expected: Motion,
@@ -403,7 +407,8 @@ def run_policy_scenario(sc: Scenario,
                         policy: Union[str, TransferPolicy, None] = None, *,
                         tree: Any = None, passes: int = 1,
                         program: Optional[Any] = None,
-                        session: Optional[Any] = None
+                        session: Optional[Any] = None,
+                        executor: str = "blocking"
                         ) -> List[PolicyMeasurement]:
     """Differential harness over a compiled program: pass 0 is cold, later
     passes mutate ``params['mutate_paths']`` (when declared) and must ship
@@ -417,9 +422,18 @@ def run_policy_scenario(sc: Scenario,
     closed form == structural == ledger.  Program-level invariants checked
     every pass: ONE sync, enqueue count == H2D DMA count, and staged
     values equal to the (possibly mutated) host tree leaf-for-leaf.
+
+    ``executor="async"`` runs every pass through the pipelined executor
+    (``to_device_async(...).result()``) under the SAME per-region/
+    program-level checks — the differential harness for async==sync
+    equivalence (staged trees and ledgers must match the blocking path
+    bit-for-bit).
     """
     from repro.core import TreePath, get_session
 
+    if executor not in ("blocking", "async"):
+        raise ValueError(f"executor must be 'blocking' or 'async', "
+                         f"got {executor!r}")
     if tree is None:
         tree = sc.build()
     if policy is None:
@@ -443,7 +457,10 @@ def run_policy_scenario(sc: Scenario,
                 cur = tp.set(cur, leaf + np.ones((), leaf.dtype))
         program.reset_ledgers()
         t0 = time.perf_counter()
-        dev = program.to_device(cur)
+        if executor == "async":
+            dev = program.to_device_async(cur).result()
+        else:
+            dev = program.to_device(cur)
         jax.block_until_ready([l for l in jax.tree_util.tree_leaves(dev)
                                if isinstance(l, jax.Array)])
         wall_us = (time.perf_counter() - t0) * 1e6
@@ -474,5 +491,8 @@ def run_policy_scenario(sc: Scenario,
             stats.enqueue_total, stats.syncs,
             regions={k: led.as_dict()
                      for k, led in program.ledgers.items()},
-            expected=expected))
+            expected=expected, executor=executor,
+            overlap_us=stats.overlap_s * 1e6,
+            offload_us=stats.offloaded_s * 1e6,
+            finish_us=stats.finish_s * 1e6))
     return out

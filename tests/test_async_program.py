@@ -1,0 +1,198 @@
+"""Async==sync equivalence for the pipelined TransferProgram executor.
+
+The differential contract (ISSUE 6): ``to_device_async(...).result()`` must
+be observationally identical to ``to_device`` — bit-identical staged trees
+and identical merged ledger COUNTERS (timing attributions differ by
+construction: the pipelined pass books the barrier as ``overlap_s`` off the
+caller's wall) — across the scenario registry, at the FENCE_DEPTH=1
+boundary, and under mid-flight ``mark_dirty`` (write-after-enqueue must
+fence, not corrupt).  The hypothesis sweep over random trees x policies
+lives in tests/test_async_program_properties.py (repo pattern: property
+suites are separate files behind ``pytest.importorskip``).
+"""
+import jax
+import numpy as np
+import pytest
+
+import repro.core.engine as engine_lib
+from repro.core import TransferPolicy, TreePath, get_session, leaf_paths
+from repro.core.policy import ProgramFuture
+from repro.core.schemes import LazyLeaf
+from repro.scenarios import iter_scenarios, run_policy_scenario
+
+# counters that must match exactly between executors (timings excluded:
+# the async pass moves barrier wall off the caller by design)
+_COUNTERS = ("h2d_bytes", "h2d_calls", "d2h_bytes", "d2h_calls",
+             "skipped_bytes", "delta_calls", "h2d_bytes_by_device",
+             "h2d_calls_by_device", "skipped_bytes_by_device")
+
+_POLICY = ("params/**=marshal; opt/**=marshal+delta; **=marshal")
+
+
+def _tree():
+    rng = np.random.default_rng(7)
+    return {"params": {"w": rng.standard_normal((32, 8)).astype(np.float32),
+                       "b": np.ones(16, np.float32)},
+            "opt": {"m": np.zeros(24, np.float32),
+                    "t": np.arange(6, dtype=np.int32)},
+            "meta": {"ids": np.arange(10, dtype=np.int32)}}
+
+
+def _materialize(dev):
+    is_lazy = lambda l: isinstance(l, LazyLeaf)
+    return [np.asarray(l._host if is_lazy(l) else l)
+            for l in jax.tree_util.tree_leaves(dev, is_leaf=is_lazy)]
+
+
+def _counters(program):
+    led = program.merged_ledger().as_dict()
+    return {k: led[k] for k in _COUNTERS}
+
+
+def _run_both(tree, policy, mutate=(), passes=3):
+    """Drive two fresh programs (one per executor) through an identical
+    pass/mutation sequence; returns per-pass (leaves, counters) lists."""
+    session = get_session()
+    out = {}
+    for executor in ("blocking", "async"):
+        program = session.compile(tree, TransferPolicy.parse(policy))
+        cur = tree
+        trace = []
+        for i in range(passes):
+            if i:
+                for tp in map(TreePath.parse, mutate):
+                    leaf = np.asarray(tp.resolve(cur))
+                    cur = tp.set(cur, leaf + np.ones((), leaf.dtype))
+            program.reset_ledgers()
+            if executor == "async":
+                dev = program.to_device_async(cur).result()
+            else:
+                dev = program.to_device(cur)
+            assert program.last_stats.syncs == 1
+            trace.append((_materialize(dev), _counters(program)))
+        out[executor] = trace
+    return out["blocking"], out["async"]
+
+
+def _assert_equivalent(blocking, pipelined):
+    for i, ((bl, bc), (al, ac)) in enumerate(zip(blocking, pipelined)):
+        assert bc == ac, f"pass {i}: merged ledger counters diverged"
+        assert len(bl) == len(al)
+        for a, b in zip(bl, al):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_array_equal(a, b)
+
+
+def test_async_matches_blocking_simple_tree():
+    _assert_equivalent(*_run_both(_tree(), _POLICY,
+                                  mutate=("opt.m",), passes=3))
+
+
+@pytest.mark.parametrize("sc", [s for s in iter_scenarios("smoke")
+                                if s.declared_policy],
+                         ids=lambda s: s.name)
+def test_async_matches_blocking_across_registry(sc):
+    """Every registry scenario with a declared policy, both executors,
+    cold + mutated-warm passes: the three-way motion check (closed form ==
+    structural derivation == region ledger), ONE sync per pass, and the
+    per-device delta complement all hold under the pipelined executor, and
+    both executors stage identical trees with identical counters."""
+    tree = sc.build()
+    mutate = tuple(sc.params.get("mutate_paths")
+                   or filter(None, [sc.params.get("mutate_path")]))
+    for executor in ("blocking", "async"):
+        ms = run_policy_scenario(sc, tree=tree, passes=3 if mutate else 2,
+                                 executor=executor)
+        assert all(m.ok for m in ms), f"{executor}: value check failed"
+        assert all(m.motion_ok for m in ms), \
+            f"{executor}: motion contract broke"
+        assert all(m.syncs == 1 for m in ms)
+    _assert_equivalent(*_run_both(tree, sc.declared_policy,
+                                  mutate=mutate, passes=3 if mutate else 2))
+
+
+def test_async_ledger_invariants_per_device():
+    """h2d + skipped == full bytes on EVERY device, booked at finish, on a
+    warm pipelined pass of a sharded delta policy."""
+    n = max(8, jax.device_count()) * 16
+    tree = {"params": {"w": np.arange(2 * n, dtype=np.float32)},
+            "opt": {"m": np.zeros(n, np.float32)}}
+    k = jax.device_count()
+    policy = f"params/**=marshal+delta@dp{k}; **=marshal"
+    program = get_session().compile(tree, TransferPolicy.parse(policy))
+    program.to_device_async(tree).result()        # cold: ships everything
+    cold = {d: b for d, b in
+            program.region_ledger("params/**").h2d_bytes_by_device.items()}
+    program.reset_ledgers()
+    program.to_device_async(tree).result()        # warm clean: ships nothing
+    led = program.region_ledger("params/**")
+    assert program.last_stats.syncs == 1
+    for d, full in cold.items():
+        moved = led.h2d_bytes_by_device.get(d, 0)
+        skipped = led.skipped_bytes_by_device.get(d, 0)
+        assert moved + skipped == full, \
+            f"device {d}: {moved} + {skipped} != {full}"
+
+
+def test_future_lifecycle_and_depth_one_pipeline():
+    tree = _tree()
+    program = get_session().compile(tree, TransferPolicy.parse(_POLICY))
+    f1 = program.to_device_async(tree)
+    assert isinstance(f1, ProgramFuture)
+    # beginning a new pass drains the in-flight one (bounded depth 1)
+    f2 = program.to_device_async(tree)
+    assert program._inflight is f2
+    r2 = f2.result()
+    r1 = f1.result()       # already materialized by the drain; memoized
+    assert r1 is f1.result()
+    for a, b in zip(_materialize(r1), _materialize(r2)):
+        np.testing.assert_array_equal(a, b)
+    assert program._inflight is None
+
+
+def test_fence_depth_one_boundary(monkeypatch):
+    """FENCE_DEPTH=1 forces the oldest fence group to be force-waited on
+    every add: back-to-back pipelined passes must still be correct (the
+    drain discipline, not fence capacity, is what protects the buffers)."""
+    monkeypatch.setattr(engine_lib, "FENCE_DEPTH", 1)
+    tree = _tree()
+    _assert_equivalent(*_run_both(tree, _POLICY,
+                                  mutate=("opt.m", "params.w"), passes=4))
+
+
+def test_mid_flight_mark_dirty_fences_not_corrupts():
+    """A host-side in-place mutation racing an enqueued-but-unsynced pass:
+    ``mark_dirty`` must drain the flight first, so the in-flight pass keeps
+    its pre-mutation bytes and the next pass ships the dirty bucket."""
+    tree = _tree()
+    program = get_session().compile(tree, TransferPolicy.parse(_POLICY))
+    program.to_device(tree)                       # warm (cold pass done)
+    program.reset_ledgers()
+    before = np.array(tree["opt"]["m"])           # snapshot pre-mutation
+    fut = program.to_device_async(tree)
+    # write-after-enqueue: mutate the host leaf mid-flight, then mark
+    tree["opt"]["m"] += 5.0
+    program.mark_dirty(tree, "opt.m")             # drains the flight first
+    assert fut.done() or program._inflight is None
+    staged = _materialize(fut.result())
+    m_idx = [str(p) for p in leaf_paths(tree)].index("opt.m")
+    np.testing.assert_array_equal(staged[m_idx], before)  # not corrupted
+    # the next pass ships the dirtied bucket and stages the NEW bytes
+    dev2 = program.to_device_async(tree).result()
+    np.testing.assert_array_equal(_materialize(dev2)[m_idx],
+                                  before + 5.0)
+    led = program.region_ledger("opt/**")
+    assert led.h2d_bytes > 0                      # the dirty bucket shipped
+
+
+def test_drain_on_state_mutators():
+    tree = _tree()
+    program = get_session().compile(tree, TransferPolicy.parse(_POLICY))
+    for mutator in (lambda: program.reset_ledgers(),
+                    lambda: program.clear(),
+                    lambda: program.from_device(
+                        program.to_device(tree), tree)):
+        fut = program.to_device_async(tree)
+        mutator()
+        assert program._inflight is None
+        fut.result()                              # memoized, still valid

@@ -1,0 +1,44 @@
+"""Property tests: pipelined executor == blocking executor, any tree/policy.
+
+Random small trees x random rule stacks x optional steady mutations, both
+executors driven through an identical pass sequence: staged leaves must be
+bit-identical and the merged ledger counters equal on every pass (the
+differential contract of tests/test_async_program.py, fuzzed).
+"""
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from test_async_program import _assert_equivalent, _run_both  # noqa: E402
+
+_SPECS = ("marshal", "marshal+delta", "marshal+align64", "pointerchain")
+
+
+@st.composite
+def trees_and_policies(draw):
+    keys = draw(st.lists(st.sampled_from(("params", "opt", "meta", "extra")),
+                         min_size=1, max_size=3, unique=True))
+    rng = np.random.default_rng(draw(st.integers(0, 2**16)))
+    tree = {}
+    for k in keys:
+        width = draw(st.integers(1, 3))
+        tree[k] = {f"l{i}": rng.standard_normal(
+            draw(st.integers(1, 24))).astype(
+                draw(st.sampled_from((np.float32, np.float64))))
+            for i in range(width)}
+    rules = [f"{k}/**={draw(st.sampled_from(_SPECS))}"
+             for k in keys if draw(st.booleans())]
+    rules.append(f"**={draw(st.sampled_from(_SPECS))}")
+    mutate = tuple(draw(st.sampled_from([f"{k}.l0" for k in keys]))
+                   for _ in range(draw(st.integers(0, 1))))
+    return tree, "; ".join(rules), mutate
+
+
+@settings(max_examples=25, deadline=None)
+@given(trees_and_policies())
+def test_async_matches_blocking_property(case):
+    tree, policy, mutate = case
+    _assert_equivalent(*_run_both(tree, policy, mutate=mutate,
+                                  passes=3 if mutate else 2))

@@ -86,3 +86,56 @@ def test_corrupt_tmp_dir_is_ignored(state, tmp_path):
     os.makedirs(tmp_path / "step_00000099.tmp")
     ckpt.save(state, str(tmp_path), 1)
     assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_torn_checkpoint_restores_previous_step(state, tmp_path):
+    """Writer killed between staging snapshot and commit-rename: the
+    partial .tmp directory is invisible to restore; previous step loads."""
+    ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=3)
+    ac.save(state, 1)
+    ac.wait()
+
+    class WriterKilled(RuntimeError):
+        pass
+
+    def torn_commit(tmp, final):  # dies with the snapshot fully staged
+        raise WriterKilled(f"killed before renaming {tmp}")
+
+    ac._commit = torn_commit
+    torn = dict(state, step=np.int32(2))
+    ac.save(torn, 2)
+    with pytest.raises(WriterKilled):
+        ac.wait()
+    # the torn step left only a .tmp directory — restore never sees it
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    assert ckpt.available_steps(str(tmp_path)) == [1]
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    out = ckpt.load(str(tmp_path))
+    _assert_tree_equal(state, out)
+    assert int(out["step"]) == 42  # step 1's payload, not the torn step-2
+
+
+def test_pipelined_save_is_consistent_snapshot(state, tmp_path):
+    """The zero-stall path holds leaf REFERENCES: mutating the caller's
+    tree object after save() must not leak into the staged checkpoint
+    (device arrays are immutable; host copies are staged before return is
+    not required — only that the writer sees the passed leaves)."""
+    dev = jax.tree_util.tree_map(jnp.asarray, state)
+    ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=3)
+    ac.save(dev, 5)
+    # "train" on: functional update makes NEW arrays, old refs stay valid
+    dev = jax.tree_util.tree_map(lambda x: x + 1, dev)
+    ac.wait()
+    _assert_tree_equal(state, ckpt.load(str(tmp_path), 5))
+
+
+def test_snapshot_arena_double_buffers(state, tmp_path):
+    ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=5)
+    for s in (1, 2, 3):
+        ac.save(state, s)
+    ac.wait()
+    # one layout, exactly two persistent buffer sets, stall accounting live
+    assert len(ac._snapshot._bufs) == 2
+    assert ac.saves == 3 and ac.stall_s >= ac.last_stall_s >= 0.0
+    for s in (1, 2, 3):
+        _assert_tree_equal(state, ckpt.load(str(tmp_path), s))
