@@ -27,6 +27,12 @@ current-schema rows.
                   thread: overlap_s - sync_s), finish_us (post-barrier
                   bookkeeping wall), ckpt_stall_us (train-loop rows only:
                   caller-visible cost of one zero-stall checkpoint save)
+  v6              + restore_load_us / restore_reshard_us / restore_h2d_us
+                  (elastic-restart rows: the restore wall split — disk
+                  load, policy re-derivation + program compile, program
+                  H2D + compute re-placement), restarts, policy_reshards
+                  (stale policies re-derived on restore), mesh_from /
+                  mesh_to (elastic n -> m device counts)
 
 The ledger-derived column defaults come from ``TransferLedger().as_dict()``
 rather than a hand-maintained list, so a ledger field added upstream
@@ -44,7 +50,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import TransferLedger
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 
 # the ledger fields that are persisted per row, with the ledger's own
 # zero-state as their defaults (timings are reported as *_us columns
@@ -88,6 +94,16 @@ V5_DEFAULTS: Dict[str, Any] = {
     "ckpt_stall_us": None,     # train-loop rows: one zero-stall save's cost
 }
 
+V6_DEFAULTS: Dict[str, Any] = {
+    "restore_load_us": None,     # elastic rows: checkpoint disk -> host wall
+    "restore_reshard_us": None,  # policy re-derivation + program compile wall
+    "restore_h2d_us": None,      # program H2D pass + compute re-placement wall
+    "restarts": None,            # loop restarts the row's run survived
+    "policy_reshards": None,     # stale policies re-derived on restore
+    "mesh_from": None,           # elastic restart: devices before the crash
+    "mesh_to": None,             # devices the survivor restored onto
+}
+
 
 def upgrade_row(row: Dict[str, Any]) -> Dict[str, Any]:
     """Lift a row of ANY past schema to SCHEMA_VERSION (old rows parse)."""
@@ -96,7 +112,8 @@ def upgrade_row(row: Dict[str, Any]) -> Dict[str, Any]:
         raise ValueError(f"row schema {version} is newer than this reader "
                          f"({SCHEMA_VERSION}); update benchmarks/bench_schema.py")
     out = dict(row)
-    for defaults in (V2_DEFAULTS, V3_DEFAULTS, V4_DEFAULTS, V5_DEFAULTS):
+    for defaults in (V2_DEFAULTS, V3_DEFAULTS, V4_DEFAULTS, V5_DEFAULTS,
+                     V6_DEFAULTS):
         for key, default in defaults.items():
             out.setdefault(key, dict(default) if isinstance(default, dict)
                            else default)

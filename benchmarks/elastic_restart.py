@@ -1,0 +1,172 @@
+"""Elastic-restart benchmark: the restore path's deep copy, measured.
+
+The paper's deep copy run at the worst possible moment: the cluster
+shrank, the checkpoint must re-place onto a DIFFERENT mesh, and the state
+policy the survivor was handed still names the dead one.  One episode:
+
+1. reference: an uninterrupted ``num_steps`` run (the trajectory oracle);
+2. :func:`repro.runtime.run_elastic` trains on an n-device mesh, kills the
+   incarnation at ``crash_step``, then restores onto ``m != n`` devices
+   through the loop's re-derived state policy (``policy_reshards`` counts
+   the re-derivation) and runs to completion.
+
+Correctness is asserted, not reported: the resumed trajectory must be
+bit-identical to the reference (:func:`trajectory_diff` — the
+deterministic ``(seed, step, rank)`` pipeline replays exactly, and a
+restore is a transfer, not arithmetic).
+
+The row (schema v6, ``benchmarks.bench_schema``) records the restore wall
+split — ``restore_load_us`` (checkpoint disk -> host), ``restore_reshard_us``
+(policy re-derivation + program compile), ``restore_h2d_us`` (program H2D
+pass + compute re-placement) — plus ``mesh_from``/``mesh_to`` and
+``policy_reshards``.  Rows MERGE into ``BENCH_transfer.json`` (same-key
+rows replaced, everything else kept), since ``benchmarks.transfer_steady``
+owns and rewrites that file earlier in a ``benchmarks.run`` sweep.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+from typing import List, Optional
+
+import jax
+
+from repro.data import SyntheticLM
+from repro.models import registry
+from repro.optim import constant, make_optimizer
+from repro.runtime import (make_train_step, run, run_elastic, train_state,
+                           trajectory_diff)
+from repro.runtime.train import state_transfer_policy
+
+from .bench_schema import SCHEMA_VERSION, row_key, upgrade_row
+
+_COLS = ("scenario,mesh_from,mesh_to,policy_reshards,restore_load_us,"
+         "restore_reshard_us,restore_h2d_us,restore_wall_us")
+
+
+def _episode_row(n: int, m: int, num_steps: int, crash_step: int,
+                 ckpt_every: int, out) -> dict:
+    api = registry.get("llama3.2-1b", smoke=True)
+    opt = make_optimizer("adamw")
+    step = jax.jit(make_train_step(api, opt, constant(1e-2)))
+    data = SyntheticLM(api.cfg.vocab_size, seq_len=32, global_batch=4)
+    init = lambda: train_state(api, opt, jax.random.PRNGKey(11))
+    data_fn = lambda s: data.batch(s)
+
+    reference = run(step, init, data_fn, num_steps)
+    tmp = tempfile.mkdtemp(prefix="elastic_restart_")
+    try:
+        res = run_elastic(step, init, data_fn, num_steps, ckpt_dir=tmp,
+                          crash_step=crash_step, n_devices=n, m_devices=m,
+                          ckpt_every=ckpt_every,
+                          policy_fn=state_transfer_policy)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    bad = trajectory_diff(reference.metrics_history,
+                          res.result.metrics_history)
+    assert not bad, (
+        f"elastic restart n={n} -> m={m} diverged from the uninterrupted "
+        f"trajectory:\n" + "\n".join(bad))
+    split = res.restore_split
+    assert split is not None, "the survivor incarnation never restored"
+    if n != m:
+        assert res.result.policy_reshards >= 1, (
+            f"the stale dp{n} policy was not re-derived for m={m}")
+    load_us = split["load_s"] * 1e6
+    reshard_us = split["reshard_s"] * 1e6
+    h2d_us = split["h2d_s"] * 1e6
+    wall_us = load_us + reshard_us + h2d_us
+    row = dict(schema=SCHEMA_VERSION,
+               scenario=f"elastic_restart_n{n}_m{m}", family="elastic",
+               scheme="elastic-restart", spec="",
+               policy=str(state_transfer_policy(n)),  # what the survivor GOT
+               first_wall_us=round(wall_us, 1),
+               cached_wall_us=round(wall_us, 1),
+               speedup=None, h2d_bytes=0, h2d_calls=0,
+               enqueue_us=None, sync_us=None,
+               restore_load_us=round(load_us, 1),
+               restore_reshard_us=round(reshard_us, 1),
+               restore_h2d_us=round(h2d_us, 1),
+               restarts=1,                       # one process-level restart
+               policy_reshards=res.result.policy_reshards,
+               mesh_from=n, mesh_to=m,
+               n_devices=m, sharded=m > 1,
+               restored_step=res.restored_step, crash_step=res.crash_step)
+    row = upgrade_row(row)
+    print(f"{row['scenario']},{n},{m},{row['policy_reshards']},"
+          f"{row['restore_load_us']},{row['restore_reshard_us']},"
+          f"{row['restore_h2d_us']},{round(wall_us, 1)}", file=out)
+    return row
+
+
+def _merge_json(rows: List[dict], json_path: str, out) -> None:
+    """Replace same-key rows in an existing BENCH_transfer.json, keep the
+    rest (the transfer section owns the file and rewrites it wholesale)."""
+    existing: List[dict] = []
+    if os.path.exists(json_path):
+        with open(json_path) as f:
+            existing = json.load(f)
+    fresh = {row_key(r) for r in rows}
+    merged = [r for r in existing if row_key(upgrade_row(r)) not in fresh]
+    merged.extend(rows)
+    with open(json_path, "w") as f:
+        json.dump(merged, f, indent=2)
+    print(f"[elastic_restart] merged {len(rows)} row(s) into {json_path} "
+          f"({len(merged)} total, schema v{SCHEMA_VERSION})", file=out)
+
+
+def run_bench(n: Optional[int] = None, m: Optional[int] = None,
+              quick: bool = False, steps: Optional[int] = None,
+              crash_step: Optional[int] = None, ckpt_every: int = 4,
+              json_path: Optional[str] = None, out=sys.stdout) -> List[dict]:
+    n = n if n is not None else jax.device_count()
+    m = m if m is not None else max(1, n // 2)
+    visible = jax.device_count()
+    if m > visible:
+        raise SystemExit(f"--m {m} exceeds the {visible} visible device(s); "
+                         f"set XLA_FLAGS=--xla_force_host_platform_"
+                         f"device_count={m} to emulate on CPU")
+    steps = steps if steps is not None else (12 if quick else 24)
+    crash_step = crash_step if crash_step is not None \
+        else max(ckpt_every + 1, steps * 3 // 4)
+    print(_COLS, file=out)
+    rows = [_episode_row(n, m, steps, crash_step, ckpt_every, out)]
+    if n != m:
+        # control: same-mesh restart (no reshard) — the n -> m delta over
+        # this row is the price of elasticity itself
+        rows.append(_episode_row(m, m, steps, crash_step, ckpt_every, out))
+    print(f"[elastic_restart] n={n} -> m={m}: trajectory bit-identical, "
+          f"restore split recorded", file=out)
+    if json_path:
+        _merge_json(rows, json_path, out)
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="elastic-restart benchmark: n -> m mesh restore, "
+                    "bit-identical trajectory asserted")
+    ap.add_argument("--n", type=int, default=None,
+                    help="pre-crash mesh size (default: every visible device)")
+    ap.add_argument("--m", type=int, default=None,
+                    help="surviving mesh size (default: max(1, n // 2))")
+    ap.add_argument("--quick", action="store_true", help="12 steps, not 24")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--crash-step", type=int, default=None)
+    ap.add_argument("--ckpt-every", type=int, default=4)
+    ap.add_argument("--json", default=None,
+                    help="merge rows into this BENCH_transfer.json")
+    args = ap.parse_args(argv)
+    run_bench(n=args.n, m=args.m, quick=args.quick, steps=args.steps,
+              crash_step=args.crash_step, ckpt_every=args.ckpt_every,
+              json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ Sections (paper artifact -> module):
     dense               §4.2 / Fig. 7            benchmarks.dense_scenario
     transfer            registry x scheme steady state benchmarks.transfer_steady
     transfer_overlap    pipelined executor overlap     benchmarks.transfer_overlap
+    elastic             n -> m restart restore split   benchmarks.elastic_restart
     instructions        §6.3 / Tables 3-4        benchmarks.instruction_count
     marshal_kernel      Alg. 1 as a TPU kernel   benchmarks (inline)
     checkpoint          marshalled ckpt I/O      benchmarks.checkpoint_bench
@@ -18,7 +19,7 @@ Sections (paper artifact -> module):
 
 The transfer section iterates the full ``repro.scenarios`` registry and
 writes ``BENCH_transfer.json`` (repo root) in the schema-versioned row
-format of ``benchmarks.bench_schema`` (v5): TransferSpec x scenario x
+format of ``benchmarks.bench_schema`` (v6): TransferSpec x scenario x
 {spec, first_wall_us, cached_wall_us, h2d_bytes, h2d_calls, enqueue_us,
 sync_us, skipped_bytes, delta_calls, sharded, n_devices, per_device_*,
 *_by_device, steady_*} plus one PROGRAM row per scenario policy ({policy,
@@ -128,6 +129,15 @@ def main(argv=None) -> None:
         transfer_overlap.run(quick=args.quick,
                              repeats=3 if args.quick else 5,
                              json_path=json_path)
+
+    if "elastic" not in skip:
+        _section("elastic restart (n -> m mesh restore, trajectory asserted)")
+        from . import elastic_restart
+        json_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_transfer.json")
+        # runs AFTER the transfer section on purpose: transfer_steady owns
+        # and rewrites BENCH_transfer.json; elastic rows merge into it
+        elastic_restart.run_bench(quick=args.quick, json_path=json_path)
 
     if "instructions" not in skip:
         _section("instruction count (Tables 3-4)")

@@ -1,5 +1,7 @@
-from .ckpt import (AsyncCheckpointer, SnapshotArena, available_steps,
-                   latest_step, load, restore, save, selective_restore)
+from .ckpt import (AsyncCheckpointer, CheckpointWriteError, SnapshotArena,
+                   available_steps, latest_step, load, restore, save,
+                   selective_restore)
 
-__all__ = ["AsyncCheckpointer", "SnapshotArena", "available_steps",
-           "latest_step", "load", "restore", "save", "selective_restore"]
+__all__ = ["AsyncCheckpointer", "CheckpointWriteError", "SnapshotArena",
+           "available_steps", "latest_step", "load", "restore", "save",
+           "selective_restore"]

@@ -20,7 +20,9 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
+import sys
 import threading
 import time
 from typing import Any, Dict, Optional, Sequence, Union
@@ -33,6 +35,32 @@ from ..core import arena as arena_lib
 from ..core.treepath import TreePath, leaf_paths
 
 _FLAG = "manifest.json"
+_OLD_SUFFIX = ".old"
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointWriteError(RuntimeError):
+    """An async checkpoint save failed on the writer thread.  Carries the
+    step number; the original failure is ``__cause__``.  Raised by the next
+    ``save()``/``wait()`` so a silent stale "latest" checkpoint is
+    impossible."""
+
+    def __init__(self, step: int, cause: BaseException):
+        super().__init__(
+            f"async checkpoint save of step {step} failed on the writer "
+            f"thread: {cause!r}; the latest durable checkpoint is an "
+            f"EARLIER step")
+        self.step = step
+
+
+def _trip(point: str) -> None:
+    """Fault-injection hook (``repro.runtime.faults``), looked up through
+    sys.modules so the checkpoint layer never imports the runtime package:
+    an injector can only be installed by importing faults, so an absent
+    module means no-op is the correct behaviour."""
+    faults = sys.modules.get("repro.runtime.faults")
+    if faults is not None:
+        faults.trip(point)
 
 
 def _step_dir(directory: str, step: int) -> str:
@@ -65,11 +93,37 @@ def _rebuild(template: Any, leaves: Dict[int, Any]) -> Any:
     return template
 
 
+def _fsync_dir(path: str) -> None:
+    """Flush a directory entry (the rename itself) to the storage device."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - e.g. platforms without dir fds
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def _commit(tmp: str, final: str) -> None:
-    """The atomic commit: a checkpoint either fully exists or it doesn't."""
+    """The atomic commit: a checkpoint either fully exists or it doesn't.
+
+    Re-saving an existing step must NOT delete the committed copy before
+    the new one is in place (a crash in that window would lose the step):
+    the old dir is renamed aside, the new one renamed in, the parent
+    directory fsynced (the rename is durable), and only then is the aside
+    copy removed.  A crash inside the window leaves ``step_N.old``, which
+    :func:`available_steps` recovers on the next listing."""
+    old = final + _OLD_SUFFIX
     if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+        if os.path.exists(old):
+            shutil.rmtree(old)            # stale leftover of a prior crash
+        os.rename(final, old)
+    _trip("ckpt.commit")                  # the commit window: old aside,
+    os.rename(tmp, final)                 # new not yet in place
+    _fsync_dir(os.path.dirname(final) or ".")
+    if os.path.isdir(old):
+        shutil.rmtree(old, ignore_errors=True)
 
 
 def _write_step(host_state: Any, buffers: Dict[str, np.ndarray],
@@ -80,12 +134,18 @@ def _write_step(host_state: Any, buffers: Dict[str, np.ndarray],
 
     Everything before ``commit`` is torn-tolerant: restore ignores ``.tmp``
     directories and manifest-less directories, so a writer killed mid-write
-    leaves the previous step as the latest."""
+    leaves the previous step as the latest.  Every bucket file and the
+    manifest are fsynced before the commit — the rename must never be
+    durable while the bytes it names are not."""
     tmp = _step_dir(directory, step) + ".tmp"
     final = _step_dir(directory, step)
     os.makedirs(tmp, exist_ok=True)
     for bucket, buf in buffers.items():
-        buf.tofile(os.path.join(tmp, f"{bucket}.bin"))
+        with open(os.path.join(tmp, f"{bucket}.bin"), "wb") as f:
+            buf.tofile(f)
+            f.flush()
+            os.fsync(f.fileno())
+    _trip("ckpt.write")                   # buckets on disk, no manifest yet
 
     paths = [str(p) for p in leaf_paths(host_state)]
     manifest = {
@@ -101,6 +161,9 @@ def _write_step(host_state: Any, buffers: Dict[str, np.ndarray],
     }
     with open(os.path.join(tmp, _FLAG), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
     commit(tmp, final)
     return final
 
@@ -116,14 +179,39 @@ def save(state: Any, directory: str, step: int, *, extra_meta: Optional[dict] = 
                        extra_meta, t0)
 
 
+def _recover_aside(directory: str) -> None:
+    """Finish an interrupted :func:`_commit`: a ``step_N.old`` whose
+    ``step_N`` is missing IS the committed step (the crash hit inside the
+    commit window, before the new rename) — rename it back.  Idempotent and
+    rename-atomic; races with a concurrent writer just lose the rename."""
+    for name in os.listdir(directory):
+        if not name.endswith(_OLD_SUFFIX):
+            continue
+        stem = name[:-len(_OLD_SUFFIX)]
+        if not _STEP_RE.match(stem):
+            continue
+        final = os.path.join(directory, stem)
+        aside = os.path.join(directory, name)
+        if not os.path.exists(final) \
+                and os.path.exists(os.path.join(aside, _FLAG)):
+            try:
+                os.rename(aside, final)
+            except OSError:  # pragma: no cover - lost a benign race
+                pass
+
+
 def available_steps(directory: str) -> list[int]:
+    """Durable steps, strictly ``step_<N>`` dirs carrying a manifest:
+    ``.tmp`` staging, ``.old`` aside copies and foreign names are never
+    step candidates (the old prefix match crashed on ``step_N.old``)."""
     if not os.path.isdir(directory):
         return []
+    _recover_aside(directory)
     out = []
     for name in os.listdir(directory):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            if os.path.exists(os.path.join(directory, name, _FLAG)):
-                out.append(int(name.split("_")[1]))
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(directory, name, _FLAG)):
+            out.append(int(m.group(1)))
     return sorted(out)
 
 
@@ -190,9 +278,28 @@ def restore(directory: str, step: Optional[int] = None, *,
     if shardings is None:
         return host
     flat_h, tdef_h = jax.tree_util.tree_flatten(host)
-    flat_s = jax.tree_util.tree_leaves(shardings)
-    if len(flat_h) != len(flat_s):
-        raise ValueError("sharding tree does not match checkpoint tree")
+    flat_s, tdef_s = jax.tree_util.tree_flatten(shardings)
+    if tdef_s != tdef_h:
+        # leaf-count equality is NOT structural equality: a different tree
+        # with the same number of leaves would silently zip shardings onto
+        # the wrong arrays.  Name the first diverging path.
+        paths_h = [str(p) for p in leaf_paths(host)]
+        paths_s = [str(p) for p in leaf_paths(shardings)]
+        diverge = next(
+            (f"checkpoint has {a!r}, shardings have {b!r}"
+             for a, b in zip(paths_h, paths_s) if a != b), None)
+        if diverge is None:
+            if len(paths_h) != len(paths_s):
+                longer = paths_h if len(paths_h) > len(paths_s) else paths_s
+                side = "checkpoint" if longer is paths_h else "shardings"
+                diverge = (f"{side} side has extra leaf "
+                           f"{longer[min(len(paths_h), len(paths_s))]!r}")
+            else:  # same printed paths, different containers (dict vs list)
+                diverge = (f"same leaf paths but different container "
+                           f"structure ({tdef_h} vs {tdef_s})")
+        raise ValueError(
+            f"sharding tree does not match checkpoint tree: first "
+            f"divergence — {diverge}")
     flat_d = [jax.device_put(h, s) for h, s in zip(flat_h, flat_s)]
     return jax.tree_util.tree_unflatten(tdef_h, flat_d)
 
@@ -255,6 +362,7 @@ class AsyncCheckpointer:
         self._thread: Optional[threading.Thread] = None
         self._snapshot = SnapshotArena()
         self.last_error: Optional[BaseException] = None
+        self.last_error_step: Optional[int] = None
         self.saves = 0
         self.stall_s = 0.0       # cumulative caller-visible save cost
         self.last_stall_s = 0.0
@@ -281,12 +389,16 @@ class AsyncCheckpointer:
                 # the D2H is already in flight; asarray only waits it out
                 host = [np.asarray(l) for l in leaves]
                 arena_lib.pack_into(bufs, layout, host)
+                _trip("ckpt.pack")    # snapshot staged, nothing written yet
                 host_state = jax.tree_util.tree_unflatten(treedef, host)
                 _write_step(host_state, bufs, layout, self.directory, step,
                             extra_meta, t0, commit=self._commit)
                 self._gc()
-            except BaseException as e:  # pragma: no cover - surfaced at wait
+            except BaseException as e:
+                # never swallowed: parked here (with the step number) and
+                # re-raised by the NEXT save()/wait() as CheckpointWriteError
                 self.last_error = e
+                self.last_error_step = step
 
         self._thread = threading.Thread(
             target=work, name="checkpoint-writer", daemon=True)
@@ -301,9 +413,11 @@ class AsyncCheckpointer:
             self._thread = None
         if self.last_error is not None:
             err, self.last_error = self.last_error, None
-            raise err
+            step, self.last_error_step = self.last_error_step, None
+            raise CheckpointWriteError(step, err) from err
 
     def _gc(self):
         steps = available_steps(self.directory)
         for s in steps[:-self.keep]:
+            _trip("ckpt.gc")          # about to retire a durable step
             shutil.rmtree(_step_dir(self.directory, s), ignore_errors=True)

@@ -253,6 +253,24 @@ class TransferPolicy:
         """The policy's (single, validated) sharded-mesh size, 1 if none."""
         return max((r.spec.num_shards for r in self.rules), default=1)
 
+    def reshard(self, k: int) -> "TransferPolicy":
+        """Re-derive this policy for a mesh of ``k`` devices: every sharded
+        rule's mesh size becomes ``k`` (``k == 1`` drops the sharding axis
+        entirely), unsharded rules pass through untouched.  This is the
+        elastic-restart move — a policy compiled for the pre-failure mesh
+        is re-derived for the surviving one, keeping every other axis
+        (kind, delta, alignment, staging) of every rule intact."""
+        if int(k) < 1:
+            raise UnsupportedPolicyError(
+                f"cannot reshard a policy onto {k} devices")
+        k = int(k)
+        rules = tuple(
+            PolicyRule(r.pattern, r.spec.replace(sharding=None if k == 1
+                                                 else k))
+            if r.spec.num_shards > 1 else r
+            for r in self.rules)
+        return TransferPolicy(rules)
+
 
 # ---------------------------------------------------------------------------
 # region partitioning
@@ -435,9 +453,18 @@ class TransferProgram:
         # stays PRIVATE to this program (a fresh program's first pass is
         # always a full cold transfer, like a fresh executor's), but the
         # session still tracks it so session.clear() releases it.
-        self._schemes = collections.OrderedDict(
-            (key, transfer_scheme(region.spec, session))
-            for key, region in regions.items())
+        self._schemes = collections.OrderedDict()
+        for key, region in regions.items():
+            try:
+                self._schemes[key] = transfer_scheme(region.spec, session)
+            except UnsupportedPolicyError:
+                raise
+            except UnsupportedSpecError as e:
+                # name the rule: a caller recovering from a stale mesh
+                # (policy.reshard) needs to know WHICH rule cannot execute
+                raise UnsupportedPolicyError(
+                    f"rule {region.rule} cannot execute on this host: {e}"
+                ) from e
         self.last_stats: Optional[ProgramStats] = None
         # the bounded pipeline: at most one un-materialized async pass;
         # beginning any new pass (or touching program state) drains it

@@ -192,9 +192,18 @@ def _warn_legacy(what: str) -> None:
 
 def _default_dp_sharding(k: int):
     """A 1-D "data" NamedSharding over the first ``k`` devices — what an
-    int sharding axis (``@dp{k}``) executes on."""
+    int sharding axis (``@dp{k}``) executes on.  A mesh larger than the
+    visible device set is an :class:`UnsupportedSpecError`, not a raw jax
+    ValueError: after an elastic mesh change this is the recoverable
+    "stale policy" signal (re-derive via ``TransferPolicy.reshard``)."""
     from jax.sharding import NamedSharding, PartitionSpec
 
+    visible = jax.device_count()
+    if k > visible:
+        raise UnsupportedSpecError(
+            f"sharded spec names a dp{k} mesh, but only {visible} device(s) "
+            f"are visible — the policy is stale for this (surviving) mesh; "
+            f"re-derive it for {visible} device(s)")
     mesh = jax.make_mesh((k,), ("data",))
     return NamedSharding(mesh, PartitionSpec("data"))
 

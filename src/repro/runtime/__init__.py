@@ -1,10 +1,17 @@
-from .loop import NodeFailure, StragglerWatchdog, TrainLoopResult, run
+from .faults import (FaultInjector, InjectedFault, ElasticResult, injected,
+                     run_elastic, trajectory_diff)
+from .loop import (NodeFailure, RestoreError, StragglerWatchdog,
+                   TrainLoopResult, run)
 from .serve import Request, Server
 from .train import (StatePrefetcher, abstract_train_state, init_error_state,
-                    make_dp_train_step, make_train_step, train_state,
-                    train_state_axes)
+                    make_dp_train_step, make_train_step, replicate_state,
+                    state_transfer_policy, train_state, train_state_axes)
 
-__all__ = ["NodeFailure", "StragglerWatchdog", "TrainLoopResult", "run",
+__all__ = ["FaultInjector", "InjectedFault", "ElasticResult", "injected",
+           "run_elastic", "trajectory_diff",
+           "NodeFailure", "RestoreError", "StragglerWatchdog",
+           "TrainLoopResult", "run",
            "Request", "Server", "StatePrefetcher", "abstract_train_state",
            "init_error_state", "make_dp_train_step", "make_train_step",
-           "train_state", "train_state_axes"]
+           "replicate_state", "state_transfer_policy", "train_state",
+           "train_state_axes"]

@@ -23,10 +23,39 @@ import jax
 import numpy as np
 
 from ..checkpoint import AsyncCheckpointer, latest_step, restore
+from . import faults as faults_lib
 
 
 class NodeFailure(RuntimeError):
     """Raised by the failure injector to simulate a lost node/pod."""
+
+
+class RestoreError(RuntimeError):
+    """A checkpoint restored cleanly but cannot resume THIS loop: its state
+    schema does not match what the loop needs (a clear diagnosis instead of
+    the raw KeyError a foreign checkpoint used to produce)."""
+
+
+def _restored_step(host: Any) -> int:
+    """The resume step of a restored state tree, validated: a missing or
+    non-scalar ``step`` is a schema mismatch, named as such."""
+    if not isinstance(host, dict) or "step" not in host:
+        restored = (f"available keys: {sorted(host)}" if isinstance(host, dict)
+                    else f"restored a {type(host).__name__}, not a dict")
+        raise RestoreError(
+            f"checkpoint/state schema mismatch: the restored state has no "
+            f"'step' entry ({restored}); the checkpoint was written from a "
+            f"different state schema — run metadata belongs in extra_meta, "
+            f"which does not restore into the state tree")
+    try:
+        arr = np.asarray(host["step"])
+        if arr.size != 1:
+            raise ValueError(f"shape {arr.shape} is not a scalar")
+        return int(arr.reshape(-1)[0])
+    except (TypeError, ValueError) as e:
+        raise RestoreError(
+            f"checkpoint/state schema mismatch: 'step' must restore as a "
+            f"scalar step counter, got {host['step']!r} ({e})") from e
 
 
 @dataclasses.dataclass
@@ -58,6 +87,11 @@ class TrainLoopResult:
     straggler_steps: List[int]
     ckpt_stall_s: float = 0.0   # total caller-visible checkpoint save cost
     ckpt_saves: int = 0
+    policy_reshards: int = 0    # stale state policies re-derived on restore
+    # one dict per checkpoint restore: the restore wall split
+    # {step, policy, resharded, load_s, reshard_s, h2d_s}
+    restore_splits: List[Dict[str, Any]] = dataclasses.field(
+        default_factory=list)
 
 
 def run(train_step: Callable, init_state_fn: Callable[[], Any],
@@ -67,6 +101,7 @@ def run(train_step: Callable, init_state_fn: Callable[[], Any],
         max_restarts: int = 3,
         state_shardings: Optional[Any] = None,
         state_policy: Optional[Any] = None,
+        mesh_size: Optional[int] = None,
         watchdog: Optional[StragglerWatchdog] = None,
         log_every: int = 0) -> TrainLoopResult:
     """Run ``num_steps`` of training with checkpoint/restart semantics.
@@ -77,18 +112,56 @@ def run(train_step: Callable, init_state_fn: Callable[[], Any],
     TransferProgram — params/opt-state/metadata each under their own spec,
     one sync for the whole state — instead of the per-leaf ``jnp.asarray``
     walk.  Exclusive with ``state_shardings`` (which restores through the
-    checkpoint layer's own device placement)."""
+    checkpoint layer's own device placement).
+
+    ``mesh_size`` is the surviving mesh's device count (default: every
+    visible device).  A ``state_policy`` derived for a DIFFERENT mesh —
+    the stale cluster config an elastic restart hands the new incarnation —
+    is recoverable, not fatal: the restore path re-derives it via
+    ``TransferPolicy.reshard`` (counted in ``result.policy_reshards``) and
+    stages the checkpoint onto what actually survived.  Each restore's wall
+    is split into load (disk->host) / reshard (policy re-derivation +
+    program compile) / h2d (program pass + compute re-placement) in
+    ``result.restore_splits``."""
     watchdog = watchdog or StragglerWatchdog()
     ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
     restarts = 0
+    policy_reshards = 0
+    restore_splits: List[Dict[str, Any]] = []
     history: List[Dict[str, float]] = []
     if state_policy is not None and state_shardings is not None:
         raise ValueError("state_policy and state_shardings are exclusive")
 
+    def compile_restore_program(host):
+        """Compile the state policy for the surviving mesh, re-deriving a
+        stale one (wrong or over-sized dp axis) instead of dying."""
+        nonlocal policy_reshards
+        from ..core import TransferPolicy, UnsupportedSpecError, get_session
+
+        policy = TransferPolicy.parse(state_policy)
+        resharded = False
+        k = mesh_size if mesh_size is not None else jax.device_count()
+        if policy.num_shards > 1 and policy.num_shards != k:
+            # the declared mesh is not the surviving mesh (n -> m elastic
+            # restart): re-derive before compiling
+            policy, resharded = policy.reshard(max(1, k)), True
+            policy_reshards += 1
+        try:
+            return policy, get_session().compile(host, policy), resharded
+        except UnsupportedSpecError:
+            survivors = max(1, min(k, jax.device_count()))
+            if policy.num_shards <= survivors:
+                raise      # not a stale-mesh failure; don't mask it
+            policy = policy.reshard(survivors)
+            policy_reshards += 1
+            return policy, get_session().compile(host, policy), True
+
     def fresh_or_restored():
         if ckpt_dir and latest_step(ckpt_dir) is not None:
+            t0 = time.perf_counter()
             host = restore(ckpt_dir, shardings=state_shardings)
-            step0 = int(np.asarray(host["step"]))
+            step0 = _restored_step(host)
+            t_load = time.perf_counter() - t0
             if state_shardings is None:
                 if state_policy is not None:
                     # a fresh program per restore (cold pass, no retained
@@ -98,15 +171,35 @@ def run(train_step: Callable, init_state_fn: Callable[[], Any],
                     # behind ONE sync — pipelined, so the H2D overlaps the
                     # rest of the restart (checkpointer re-init, data
                     # replay seek) until the first step materializes it.
-                    from ..core import get_session
-                    from .train import StatePrefetcher
+                    from .train import StatePrefetcher, replicate_state
 
-                    prefetch = StatePrefetcher(
-                        get_session().compile(host, state_policy))
+                    t1 = time.perf_counter()
+                    policy, program, resharded = \
+                        compile_restore_program(host)
+                    t_reshard = time.perf_counter() - t1
+                    t2 = time.perf_counter()
+                    prefetch = StatePrefetcher(program)
                     prefetch.schedule(host)
+                    faults_lib.trip("restore.h2d")   # mid-restore kill point
                     host = prefetch.take()
+                    # sharded staging is the measured deep copy; compute
+                    # wants ONE consistent placement (see replicate_state)
+                    host = replicate_state(host, policy.num_shards)
+                    t_h2d = time.perf_counter() - t2
+                    restore_splits.append(dict(
+                        step=step0, policy=str(policy), resharded=resharded,
+                        load_s=t_load, reshard_s=t_reshard, h2d_s=t_h2d))
                 else:
+                    t2 = time.perf_counter()
                     host = jax.tree_util.tree_map(jax.numpy.asarray, host)
+                    restore_splits.append(dict(
+                        step=step0, policy="", resharded=False,
+                        load_s=t_load, reshard_s=0.0,
+                        h2d_s=time.perf_counter() - t2))
+            else:
+                restore_splits.append(dict(
+                    step=step0, policy="", resharded=False,
+                    load_s=t_load, reshard_s=0.0, h2d_s=0.0))
             return host, step0
         return init_state_fn(), 0
 
@@ -144,4 +237,6 @@ def run(train_step: Callable, init_state_fn: Callable[[], Any],
         ckpt.wait()
     return TrainLoopResult(state, history, restarts, watchdog.flagged,
                            ckpt_stall_s=(ckpt.stall_s if ckpt else 0.0),
-                           ckpt_saves=(ckpt.saves if ckpt else 0))
+                           ckpt_saves=(ckpt.saves if ckpt else 0),
+                           policy_reshards=policy_reshards,
+                           restore_splits=restore_splits)

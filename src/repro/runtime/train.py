@@ -235,6 +235,28 @@ def state_transfer_policy(dp_size: int = 1):
         "opt/**=marshal+delta; **=marshal")
 
 
+def replicate_state(state: Any, num_devices: int) -> Any:
+    """Replicate every leaf onto the first ``num_devices`` devices (``P()``
+    over the default 1-D data mesh).
+
+    The elastic-restore hand-off: a sharded state policy stages the
+    checkpoint as per-device sub-ranges (the measured deep copy — each
+    device DMAs 1/k of every bucket), but this repo's data-parallel step
+    (`make_dp_train_step`) computes on REPLICATED params.  Re-placing the
+    staged tree onto one consistent mesh makes the restored state legal
+    input for any single jitted step — the staged regions would otherwise
+    sit on different device sets (params on the dp mesh, delta regions on
+    device 0) — and keeps the resumed trajectory bit-identical: replication
+    is a copy, not arithmetic."""
+    if num_devices <= 1:
+        return state
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    mesh = jax.make_mesh((num_devices,), ("data",))
+    target = NamedSharding(mesh, PartitionSpec())
+    return jax.tree_util.tree_map(lambda l: jax.device_put(l, target), state)
+
+
 def compile_state_program(state: Dict[str, Any], dp_size: int = 1,
                           session=None):
     """Compile the state policy against a concrete train-state tree — the

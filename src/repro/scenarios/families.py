@@ -598,6 +598,69 @@ def _mixed_policy_family(size: str) -> List[Scenario]:
 
 
 # ---------------------------------------------------------------------------
+# elastic — the restore-onto-a-changed-mesh state shape (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+def elastic_tree(n: int, seed: int = 29) -> Any:
+    """The train-state shape an elastic restart restores: dp-sharded params,
+    delta optimizer state, and a marshalled step counter — the same three
+    regions ``runtime.train.state_transfer_policy`` names, sized so the
+    params f32 bucket (3n elements) splits evenly over any mesh the family
+    passes (``n = base * devices``)."""
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": rng.standard_normal(2 * n).astype(np.float32),
+                   "b": rng.standard_normal(n).astype(np.float32)},
+        "opt": {"mu": rng.standard_normal(2 * n).astype(np.float32),
+                "nu": rng.standard_normal(n).astype(np.float32),
+                "t": np.int32(0)},
+        "step": np.int32(0),
+    }
+
+
+def elastic_case(n: int, k: int) -> Scenario:
+    """Closed-form per-region Motion for the restore policy
+    ``params/**=marshal@dp{k}; opt/**=marshal+delta; **=marshal`` (the
+    state policy's shape minus its 128-alignment, which would pad the
+    closed forms away at family sizes):
+
+    * params region — one f32 bucket of 3n elements (w + b): 12n bytes in
+      1 DMA (per device 12n/k bytes, 1 DMA each on a k-mesh) — the bytes
+      an n→m restore re-ships per surviving device.
+    * opt region — f32 bucket (mu + nu, 12n bytes) + i32 bucket (t, 4):
+      cold 12n+4 bytes in 2 DMAs; steady after mutating ``opt.mu`` the f32
+      bucket ships whole (12n, 1), the i32 bucket is skipped exactly.
+    * default region (step) — 4 bytes, 1 DMA, every pass.
+    """
+    pol = f"params/**=marshal@dp{k}; opt/**=marshal+delta; **=marshal"
+    params_cold = Motion(12 * n, 1) if k == 1 else \
+        Motion(12 * n, k, 12 * n // k, 1)
+    return Scenario(
+        name=f"elastic_n{n}_dev{k}",
+        family="elastic",
+        build=functools.partial(elastic_tree, n),
+        used_paths=("params.w", "opt.mu"),
+        uvm_access=None,
+        declared_policy=pol,
+        region_expected={"params/**": params_cold,
+                         "opt/**": Motion(12 * n + 4, 2),
+                         "**": Motion(4, 1)},
+        steady_region_expected={"params/**": params_cold,
+                                "opt/**": Motion(12 * n, 1),
+                                "**": Motion(4, 1)},
+        params=dict(n=n, devices=k, mutate_paths=("opt.mu",)))
+
+
+@register("elastic")
+def _elastic_family(size: str) -> List[Scenario]:
+    import jax
+
+    k = jax.device_count()
+    n = (8 if size == "smoke" else 128) * k
+    return [elastic_case(n, k)]
+
+
+# ---------------------------------------------------------------------------
 # steady_reuse — the delta transfer steady state
 # ---------------------------------------------------------------------------
 

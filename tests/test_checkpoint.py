@@ -90,7 +90,9 @@ def test_corrupt_tmp_dir_is_ignored(state, tmp_path):
 
 def test_torn_checkpoint_restores_previous_step(state, tmp_path):
     """Writer killed between staging snapshot and commit-rename: the
-    partial .tmp directory is invisible to restore; previous step loads."""
+    partial .tmp directory is invisible to restore; previous step loads.
+    The writer-thread failure surfaces on wait() as a CheckpointWriteError
+    carrying the step number and the original exception as __cause__."""
     ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=3)
     ac.save(state, 1)
     ac.wait()
@@ -104,8 +106,10 @@ def test_torn_checkpoint_restores_previous_step(state, tmp_path):
     ac._commit = torn_commit
     torn = dict(state, step=np.int32(2))
     ac.save(torn, 2)
-    with pytest.raises(WriterKilled):
+    with pytest.raises(ckpt.CheckpointWriteError, match="step 2") as ei:
         ac.wait()
+    assert isinstance(ei.value.__cause__, WriterKilled)
+    assert ei.value.step == 2
     # the torn step left only a .tmp directory — restore never sees it
     assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
     assert ckpt.available_steps(str(tmp_path)) == [1]
@@ -113,6 +117,114 @@ def test_torn_checkpoint_restores_previous_step(state, tmp_path):
     out = ckpt.load(str(tmp_path))
     _assert_tree_equal(state, out)
     assert int(out["step"]) == 42  # step 1's payload, not the torn step-2
+
+
+def test_failed_async_save_surfaces_on_next_save(state, tmp_path):
+    """A swallowed writer exception would leave a silently stale "latest":
+    the NEXT save() call must re-raise it, step number attached."""
+    ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=3)
+
+    def torn_commit(tmp, final):
+        raise OSError("disk full")
+
+    ac._commit = torn_commit
+    ac.save(state, 1)
+    with pytest.raises(ckpt.CheckpointWriteError, match="step 1"):
+        ac.save(state, 2)   # surfaces here, not only at wait()
+
+
+# ---------------------------------------------------------------------------
+# torn-checkpoint matrix: kill at every injection point (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("point,latest_after", [
+    ("ckpt.pack", 1),     # snapshot staged, nothing on disk for step 2
+    ("ckpt.write", 1),    # bucket .bins in .tmp, manifest missing
+    ("ckpt.commit", 1),   # .tmp complete but never renamed into place
+    ("ckpt.gc", 2),       # step 2 committed; the kill hit the GC after it
+])
+def test_torn_checkpoint_matrix(state, tmp_path, point, latest_after):
+    """Kill the writer at each named point: latest_step/restore fall back
+    to the last intact step and never read a .tmp or manifest-less dir."""
+    from repro.runtime import faults
+
+    ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=1)  # keep=1: GC runs
+    ac.save(state, 1)
+    ac.wait()
+    torn = dict(state, step=np.int32(2))
+    with faults.injected(point) as inj:
+        ac.save(torn, 2)
+        with pytest.raises(ckpt.CheckpointWriteError, match="step 2") as ei:
+            ac.wait()
+    assert isinstance(ei.value.__cause__, faults.InjectedFault)
+    assert inj.fired == [(point, 1)]
+    assert ckpt.available_steps(str(tmp_path)) == (
+        [1, 2] if latest_after == 2 else [1])
+    assert ckpt.latest_step(str(tmp_path)) == latest_after
+    # whatever survived is a fully intact step, never partial staging
+    out = ckpt.load(str(tmp_path))
+    want = torn if latest_after == 2 else state
+    _assert_tree_equal(want, out)
+    # a restarted writer (no injector) completes the interrupted work
+    ac2 = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    ac2.save(torn, 2)
+    ac2.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    _assert_tree_equal(torn, ckpt.load(str(tmp_path), 2))
+
+
+def test_commit_window_crash_keeps_committed_resave(state, tmp_path):
+    """Re-saving an EXISTING step used to rmtree the committed copy before
+    the rename — a crash in that window lost the step.  With rename-aside,
+    a kill inside the commit window leaves ``step_N.old``, which the next
+    listing recovers: the step stays durable with its original payload."""
+    from repro.runtime import faults
+
+    ac = ckpt.AsyncCheckpointer(str(tmp_path), keep=3)
+    ac.save(state, 1)
+    ac.wait()
+    resave = dict(state, step=np.int32(43))
+    with faults.injected("ckpt.commit"):
+        ac.save(resave, 1)
+        with pytest.raises(ckpt.CheckpointWriteError):
+            ac.wait()
+    # killed with the old dir renamed aside and the new one not in place:
+    # the committed step 1 survives (recovered from the .old aside copy)
+    assert ckpt.available_steps(str(tmp_path)) == [1]
+    out = ckpt.load(str(tmp_path), 1)
+    assert int(out["step"]) == 42   # the ORIGINAL committed payload
+    # and a clean re-save supersedes it, leaving no .old debris
+    ac.save(resave, 1)
+    ac.wait()
+    assert int(ckpt.load(str(tmp_path), 1)["step"]) == 43
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".old")]
+
+
+def test_available_steps_ignores_foreign_names(state, tmp_path):
+    """Strict step_<N> parsing: .tmp staging, .old aside copies and foreign
+    directory names are never step candidates (the old prefix match crashed
+    on anything after the underscore that wasn't an int)."""
+    ckpt.save(state, str(tmp_path), 3)
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    os.makedirs(tmp_path / "step_x")
+    os.makedirs(tmp_path / "step_5extra")
+    assert ckpt.available_steps(str(tmp_path)) == [3]
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+def test_restore_sharding_tree_mismatch_names_path(state, tmp_path):
+    """Same leaf count, different structure: restore must name the first
+    diverging path instead of silently zipping wrong shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    ckpt.save(state, str(tmp_path), 0)
+    mesh = jax.make_mesh((1,), ("data",))
+    repl = NamedSharding(mesh, PartitionSpec())
+    wrong = {"params": {"layers": {"w": repl, "scale": repl},
+                        "embed": repl},
+             "opt": {"nu": repl},    # checkpoint has opt.mu
+             "step": repl}
+    with pytest.raises(ValueError, match=r"opt\.mu"):
+        ckpt.restore(str(tmp_path), 0, shardings=wrong)
 
 
 def test_pipelined_save_is_consistent_snapshot(state, tmp_path):

@@ -1,0 +1,189 @@
+"""Fault-injection harness + elastic restart (DESIGN.md §11).
+
+The injector itself (deterministic, fires-once, thread-safe install) plus
+the tentpole invariant: train k steps on an n-device mesh, crash, restore
+onto m != n devices through a re-derived state policy, and the resumed
+trajectory is bit-identical to an uninterrupted run.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.data import SyntheticLM
+from repro.models import registry
+from repro.optim import constant, make_optimizer
+from repro.runtime import (InjectedFault, RestoreError, make_train_step,
+                           run, run_elastic, train_state, trajectory_diff)
+from repro.runtime import faults
+from repro.runtime.train import state_transfer_policy
+
+
+@pytest.fixture(scope="module")
+def setup():
+    api = registry.get("llama3.2-1b", smoke=True)
+    opt = make_optimizer("adamw")
+    step = jax.jit(make_train_step(api, opt, constant(1e-2)))
+    data = SyntheticLM(api.cfg.vocab_size, seq_len=32, global_batch=4)
+    return api, opt, step, data
+
+
+# ---------------------------------------------------------------------------
+# the injector
+# ---------------------------------------------------------------------------
+
+def test_injector_fires_once_at_configured_arrival():
+    inj = faults.FaultInjector("ckpt.write", at=3)
+    inj.trip("ckpt.write")
+    inj.trip("ckpt.write")          # arrivals 1, 2: pass through
+    with pytest.raises(InjectedFault) as ei:
+        inj.trip("ckpt.write")      # arrival 3: the kill
+    assert ei.value.point == "ckpt.write" and ei.value.hit == 3
+    inj.trip("ckpt.write")          # fires at most once: retry proceeds
+    assert inj.fired == [("ckpt.write", 3)]
+    assert inj.hits == {"ckpt.write": 4}
+
+
+def test_injector_ignores_unconfigured_points():
+    inj = faults.FaultInjector({"ckpt.gc": 1})
+    inj.trip("ckpt.pack")           # instrumented path, not under test
+    with pytest.raises(InjectedFault):
+        inj.trip("ckpt.gc")
+
+
+def test_injector_rejects_unknown_point_and_bad_arrival():
+    with pytest.raises(ValueError, match="unknown injection point"):
+        faults.FaultInjector("ckpt.nope")
+    with pytest.raises(ValueError, match=">= 1"):
+        faults.FaultInjector("ckpt.pack", at=0)
+
+
+def test_injected_context_installs_and_deinstalls():
+    assert faults.current() is None
+    faults.trip("ckpt.pack")        # no injector: the production no-op
+    with faults.injected("ckpt.pack") as inj:
+        assert faults.current() is inj
+        with pytest.raises(InjectedFault):
+            faults.trip("ckpt.pack")
+    assert faults.current() is None
+    faults.trip("ckpt.pack")
+
+
+# ---------------------------------------------------------------------------
+# elastic restart: n devices -> m devices, bit-identical trajectory
+# ---------------------------------------------------------------------------
+
+def test_elastic_restart_bit_identical(setup, tmp_path):
+    """The tentpole invariant.  On CPU CI this runs n=jax.device_count()
+    (8 under XLA_FLAGS=--xla_force_host_platform_device_count=8, else 1)
+    down to m=max(1, n//2); the policy handed to the survivor still names
+    the n-device mesh and must be re-derived, not die."""
+    api, opt, step, data = setup
+    n = jax.device_count()
+    m = max(1, n // 2)
+    init = lambda: train_state(api, opt, jax.random.PRNGKey(7))
+    ref = run(step, init, lambda s: data.batch(s), num_steps=12)
+    res = run_elastic(step, init, lambda s: data.batch(s), num_steps=12,
+                      ckpt_dir=str(tmp_path / "ck"), crash_step=9,
+                      n_devices=n, m_devices=m, ckpt_every=4,
+                      policy_fn=state_transfer_policy)
+    assert res.restored_step == 8
+    assert res.n_devices == n and res.m_devices == m
+    bad = trajectory_diff(ref.metrics_history, res.result.metrics_history)
+    assert not bad, "trajectory diverged after elastic restart:\n" + \
+        "\n".join(bad)
+    # the resumed incarnation replays steps 8..11 only
+    assert [int(r["step"]) for r in res.result.metrics_history] == \
+        list(range(8, 12))
+    assert int(res.result.state["step"]) == 12
+    # restore wall split recorded: load / reshard / h2d
+    split = res.restore_split
+    assert split is not None and split["step"] == 8
+    assert all(split[k] >= 0.0 for k in ("load_s", "reshard_s", "h2d_s"))
+    if n != m:  # the stale dp{n} policy had to be re-derived for m
+        assert res.result.policy_reshards >= 1
+        assert split["resharded"] is True
+        assert f"dp{m}" in split["policy"] or m == 1
+
+
+def test_stale_policy_for_oversized_mesh_is_recovered(setup, tmp_path):
+    """A policy naming MORE devices than are visible (the stale cluster
+    config after shrink) used to die in mesh construction; the restore
+    path now re-derives it for the survivors and resumes."""
+    from repro.runtime import NodeFailure
+
+    api, opt, step, data = setup
+    init = lambda: train_state(api, opt, jax.random.PRNGKey(4))
+    ref = run(step, init, lambda s: data.batch(s), num_steps=12)
+    boom = {"armed": True}
+
+    def injector(s):
+        if s == 9 and boom["armed"]:
+            boom["armed"] = False
+            raise NodeFailure("simulated pod loss")
+
+    stale = state_transfer_policy(2 * jax.device_count())  # dp axis too big
+    res = run(step, init, lambda s: data.batch(s), num_steps=12,
+              ckpt_dir=str(tmp_path / "ck"), ckpt_every=4,
+              failure_injector=injector, state_policy=stale,
+              mesh_size=2 * jax.device_count())
+    assert res.restarts == 1
+    assert res.policy_reshards >= 1
+    assert not trajectory_diff(ref.metrics_history, res.metrics_history)
+
+
+def test_torn_restore_h2d_then_clean_restart(setup, tmp_path):
+    """A kill mid-restore (program pass enqueued, state not materialized)
+    unwinds without corrupting anything durable: the next incarnation
+    restores the same checkpoint cleanly and resumes bit-identically."""
+    api, opt, step, data = setup
+    init = lambda: train_state(api, opt, jax.random.PRNGKey(5))
+    ref = run(step, init, lambda s: data.batch(s), num_steps=12)
+    # phase 1: write checkpoints (no failures)
+    run(step, init, lambda s: data.batch(s), num_steps=8,
+        ckpt_dir=str(tmp_path / "ck"), ckpt_every=4,
+        state_policy=state_transfer_policy())
+    # phase 2: the restore of step 8 is killed mid-H2D
+    with faults.injected("restore.h2d"):
+        with pytest.raises(InjectedFault):
+            run(step, init, lambda s: data.batch(s), num_steps=12,
+                ckpt_dir=str(tmp_path / "ck"), ckpt_every=4,
+                state_policy=state_transfer_policy())
+    # phase 3: a clean restart restores the SAME step and finishes
+    res = run(step, init, lambda s: data.batch(s), num_steps=12,
+              ckpt_dir=str(tmp_path / "ck"), ckpt_every=4,
+              state_policy=state_transfer_policy())
+    assert res.restore_splits and res.restore_splits[0]["step"] == 8
+    assert not trajectory_diff(ref.metrics_history, res.metrics_history)
+    assert int(res.state["step"]) == 12
+
+
+def test_run_elastic_rejects_uncheckpointable_crash():
+    with pytest.raises(ValueError, match="nothing durable"):
+        run_elastic(None, None, None, 12, ckpt_dir="/nonexistent",
+                    crash_step=3, n_devices=2, m_devices=1, ckpt_every=4)
+
+
+def test_restore_error_names_schema_mismatch(setup, tmp_path):
+    """A checkpoint written from a foreign state schema used to die with a
+    raw KeyError('step'); the loop now names the mismatch and lists what
+    the checkpoint actually holds."""
+    from repro import checkpoint as ckpt
+
+    api, opt, step, data = setup
+    foreign = {"weights": np.zeros(4, np.float32), "count": np.int32(3)}
+    ckpt.save(foreign, str(tmp_path / "ck"), 8)
+    with pytest.raises(RestoreError, match="schema mismatch") as ei:
+        run(step, lambda: train_state(api, opt, jax.random.PRNGKey(0)),
+            lambda s: data.batch(s), num_steps=12,
+            ckpt_dir=str(tmp_path / "ck"))
+    assert "count" in str(ei.value) and "weights" in str(ei.value)
+
+
+def test_trajectory_diff_reports_mismatches():
+    ref = [{"step": 0, "loss": 1.0}, {"step": 1, "loss": 0.5}]
+    same = [{"step": 1, "loss": 0.5}]
+    assert trajectory_diff(ref, same) == []
+    off = [{"step": 1, "loss": 0.5000001}, {"step": 2, "loss": 0.1}]
+    bad = trajectory_diff(ref, off)
+    assert len(bad) == 2
+    assert "step 1" in bad[0] and "not in the reference" in bad[1]
