@@ -33,6 +33,14 @@ current-schema rows.
                   H2D + compute re-placement), restarts, policy_reshards
                   (stale policies re-derived on restore), mesh_from /
                   mesh_to (elastic n -> m device counts)
+  v7              + serve rows (BENCH_serve.json — the first rows whose
+                  unit is requests, not passes): requests, tokens,
+                  tokens_per_s, p50_ms / p99_ms (request latency),
+                  shed / timed_out / failed / retries (lifecycle counts),
+                  fault_point ("" = clean leg), policy_fallbacks
+                  (degradation-ladder rungs taken).  Serve rows set
+                  steady_wall_us to the p99 latency in µs so the existing
+                  --gate regression check covers them unchanged.
 
 The ledger-derived column defaults come from ``TransferLedger().as_dict()``
 rather than a hand-maintained list, so a ledger field added upstream
@@ -50,7 +58,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import TransferLedger
 
-SCHEMA_VERSION = 6
+SCHEMA_VERSION = 7
 
 # the ledger fields that are persisted per row, with the ledger's own
 # zero-state as their defaults (timings are reported as *_us columns
@@ -104,6 +112,20 @@ V6_DEFAULTS: Dict[str, Any] = {
     "mesh_to": None,             # devices the survivor restored onto
 }
 
+V7_DEFAULTS: Dict[str, Any] = {
+    "requests": None,            # serve rows: requests submitted this leg
+    "tokens": None,              # tokens generated across the leg
+    "tokens_per_s": None,        # leg throughput
+    "p50_ms": None,              # per-request latency percentiles (accepted
+    "p99_ms": None,              #   requests, submit -> terminal)
+    "shed": None,                # admission-shed requests
+    "timed_out": None,           # deadline-expired requests
+    "failed": None,              # typed-failure requests
+    "retries": None,             # transient-fault retries across the leg
+    "fault_point": None,         # injected serve.* point ("" = clean leg)
+    "policy_fallbacks": None,    # degradation-ladder rungs taken
+}
+
 
 def upgrade_row(row: Dict[str, Any]) -> Dict[str, Any]:
     """Lift a row of ANY past schema to SCHEMA_VERSION (old rows parse)."""
@@ -113,7 +135,7 @@ def upgrade_row(row: Dict[str, Any]) -> Dict[str, Any]:
                          f"({SCHEMA_VERSION}); update benchmarks/bench_schema.py")
     out = dict(row)
     for defaults in (V2_DEFAULTS, V3_DEFAULTS, V4_DEFAULTS, V5_DEFAULTS,
-                     V6_DEFAULTS):
+                     V6_DEFAULTS, V7_DEFAULTS):
         for key, default in defaults.items():
             out.setdefault(key, dict(default) if isinstance(default, dict)
                            else default)

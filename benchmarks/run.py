@@ -11,6 +11,7 @@ Sections (paper artifact -> module):
     transfer            registry x scheme steady state benchmarks.transfer_steady
     transfer_overlap    pipelined executor overlap     benchmarks.transfer_overlap
     elastic             n -> m restart restore split   benchmarks.elastic_restart
+    serve               open-loop request stream       benchmarks.serve_load
     instructions        §6.3 / Tables 3-4        benchmarks.instruction_count
     marshal_kernel      Alg. 1 as a TPU kernel   benchmarks (inline)
     checkpoint          marshalled ckpt I/O      benchmarks.checkpoint_bench
@@ -138,6 +139,14 @@ def main(argv=None) -> None:
         # runs AFTER the transfer section on purpose: transfer_steady owns
         # and rewrites BENCH_transfer.json; elastic rows merge into it
         elastic_restart.run_bench(quick=args.quick, json_path=json_path)
+
+    if "serve" not in skip:
+        _section("serve load (open-loop request stream, faulted legs)")
+        from . import serve_load
+        json_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_serve.json")
+        serve_load.run_bench(preset="quick" if args.quick else "full",
+                             json_path=json_path)
 
     if "instructions" not in skip:
         _section("instruction count (Tables 3-4)")

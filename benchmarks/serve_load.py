@@ -1,0 +1,256 @@
+"""Serve load benchmark: the first rows whose unit is REQUESTS, not passes.
+
+A synthetic open-loop request stream (arrivals keep coming whether or not
+the server keeps up — the millions-of-users shape) drives the resilient
+server of ``repro.runtime.serve``: mixed prompt lengths, slot churn
+(requests outnumber slots several times over), and a bounded admission
+queue.  Each leg reports tokens/sec and p50/p99 request latency
+(submit -> terminal) as a schema-v7 row (``benchmarks.bench_schema``)
+into ``BENCH_serve.json``.
+
+Legs:
+
+  * ``clean``      — no faults: the throughput/latency baseline.
+  * ``overload``   — a shed watermark far below the arrival count: proves
+                     backpressure answers (shed > 0) instead of buffering
+                     without bound; latency is measured over the admitted
+                     requests only.
+  * one leg per ``serve.*`` fault point — an injected kill mid-pack /
+    mid-decode / mid-refill / mid-policy-swap.  Each faulted leg asserts
+    the lifecycle contract: every submitted rid terminates in exactly one
+    state, the server stays up (completions continue after the fault),
+    and in the smoke preset the faulted p99 stays bounded
+    (< ``P99_BOUND`` x the clean p99).
+
+Rows set ``steady_wall_us`` to the p99 latency in µs, so the existing
+``bench_schema --gate`` regression check covers serving with no new
+machinery (CI gates serve rows with a looser threshold — request latency
+on shared runners is noisier than arena walls).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.models import registry
+from repro.runtime import Request, Server
+from repro.runtime import faults as faults_lib
+from repro.runtime.faults import SERVE_POINTS
+
+from .bench_schema import SCHEMA_VERSION, row_key, upgrade_row
+
+# the smoke-preset acceptance bound: faulted p99 < P99_BOUND * clean p99
+P99_BOUND = 3.0
+
+PRESETS: Dict[str, Dict[str, int]] = {
+    # requests deliberately outnumber slots: every leg churns its slots
+    "smoke": dict(requests=12, slots=4, max_seq=64, max_new=6,
+                  max_ticks=400),
+    "quick": dict(requests=24, slots=4, max_seq=64, max_new=8,
+                  max_ticks=800),
+    "full": dict(requests=64, slots=8, max_seq=128, max_new=16,
+                 max_ticks=4000),
+}
+
+_COLS = ("leg,requests,completed,shed,timed_out,failed,retries,"
+         "tokens,tokens_per_s,p50_ms,p99_ms,fallbacks")
+
+
+def _mixed_prompts(rng: np.random.Generator, n: int, vocab: int,
+                   max_seq: int) -> List[np.ndarray]:
+    """Mixed prompt lengths spanning the pack buckets (short chat-like to
+    long context-like), capped well under max_seq."""
+    lens = rng.integers(3, min(25, max_seq // 2), size=n)
+    return [rng.integers(0, vocab, size=int(p)).astype(np.int32)
+            for p in lens]
+
+
+def _drive(server: Server, reqs: List[Request],
+           max_ticks: int) -> Tuple[Dict[int, float], float]:
+    """Open-loop drive: one arrival per tick (the stream does not wait for
+    the server), then ticks until drained.  Returns per-rid latency
+    (submit -> terminal, accepted requests only) and the total wall."""
+    latency: Dict[int, float] = {}
+    submit_at: Dict[int, float] = {}
+    seen_terminal = 0
+    t0 = time.perf_counter()
+    i = 0
+    for _ in range(max_ticks):
+        if i < len(reqs):
+            submit_at[reqs[i].rid] = time.perf_counter()
+            server.submit(reqs[i])
+            i += 1
+        more = server.tick()
+        for req in server.tracker.finished()[seen_terminal:]:
+            latency[req.rid] = time.perf_counter() - submit_at[req.rid]
+            seen_terminal += 1
+        if i >= len(reqs) and not more:
+            break
+    return latency, time.perf_counter() - t0
+
+
+def run_leg(leg: str, preset: str, *, fault: Optional[str] = None,
+            shed_watermark: Optional[int] = None, seed: int = 0,
+            out=sys.stdout) -> Dict[str, Any]:
+    """One open-loop leg; returns its schema-v7 row.  Asserts (not merely
+    reports) the lifecycle contract: conservation, typed terminals, and —
+    on faulted legs — that the server kept completing requests."""
+    sizes = PRESETS[preset]
+    api = registry.get("llama3.2-1b", smoke=True)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    prompts = _mixed_prompts(rng, sizes["requests"], api.cfg.vocab_size,
+                             sizes["max_seq"])
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=sizes["max_new"])
+            for i, p in enumerate(prompts)]
+
+    def build_and_drive():
+        server = Server(api, params, slots=sizes["slots"],
+                        max_seq=sizes["max_seq"],
+                        max_queue=2 * sizes["requests"],
+                        shed_watermark=shed_watermark,
+                        backoff_base_s=0.0)
+        latency, wall_s = _drive(server, reqs, sizes["max_ticks"])
+        return server, latency, wall_s
+
+    if fault:
+        # arrival 2 lands the kill mid-run (past the very first op) for
+        # every point except policy_swap, which only trips at install
+        at = 1 if fault == "serve.policy_swap" else 2
+        with faults_lib.injected(fault, at=at) as inj:
+            server, latency, wall_s = build_and_drive()
+        assert inj.fired, f"{fault} was never reached by the {leg} leg"
+    else:
+        server, latency, wall_s = build_and_drive()
+
+    stats = server.stats
+    # the lifecycle contract, enforced in the benchmark itself
+    server.tracker.assert_conserved()
+    assert stats.terminal == stats.submitted, (
+        f"{leg}: {stats.submitted} submitted but {stats.terminal} terminal")
+    if fault:
+        assert stats.completed > 0, (
+            f"{leg}: server stopped completing requests after the fault")
+
+    lat_ms = sorted(v * 1e3 for v in latency.values())
+    p50 = float(np.percentile(lat_ms, 50)) if lat_ms else None
+    p99 = float(np.percentile(lat_ms, 99)) if lat_ms else None
+    tok_s = stats.tokens_generated / wall_s if wall_s > 0 else 0.0
+    ledger = server.program.merged_ledger()
+
+    row = upgrade_row(dict(
+        schema=SCHEMA_VERSION,
+        scenario=f"serve_open_loop_{leg}", family="serve", scheme="serve",
+        spec="", policy=str(server.policy),
+        first_wall_us=round(wall_s * 1e6, 1),
+        cached_wall_us=round(p50 * 1e3, 1) if p50 is not None else None,
+        steady_wall_us=round(p99 * 1e3, 1) if p99 is not None else None,
+        speedup=None,
+        h2d_bytes=ledger.h2d_bytes, h2d_calls=ledger.h2d_calls,
+        enqueue_us=None, sync_us=None,
+        n_devices=jax.device_count(),
+        requests=stats.submitted, tokens=stats.tokens_generated,
+        tokens_per_s=round(tok_s, 1),
+        p50_ms=round(p50, 3) if p50 is not None else None,
+        p99_ms=round(p99, 3) if p99 is not None else None,
+        shed=stats.shed, timed_out=stats.timed_out, failed=stats.failed,
+        retries=stats.retries_total, fault_point=fault or "",
+        policy_fallbacks=stats.policy_fallbacks))
+    print(f"{leg},{stats.submitted},{stats.completed},{stats.shed},"
+          f"{stats.timed_out},{stats.failed},{stats.retries_total},"
+          f"{stats.tokens_generated},{row['tokens_per_s']},"
+          f"{row['p50_ms']},{row['p99_ms']},{stats.policy_fallbacks}",
+          file=out)
+    return row
+
+
+def _merge_json(rows: List[dict], json_path: str, out) -> None:
+    """Replace same-key rows in an existing BENCH_serve.json, keep the
+    rest — reruns of a leg subset must not drop the other legs' rows."""
+    existing: List[dict] = []
+    if os.path.exists(json_path):
+        with open(json_path) as f:
+            existing = json.load(f)
+    fresh = {row_key(r) for r in rows}
+    merged = [r for r in existing if row_key(upgrade_row(r)) not in fresh]
+    merged.extend(rows)
+    with open(json_path, "w") as f:
+        json.dump(merged, f, indent=2)
+    print(f"[serve_load] merged {len(rows)} row(s) into {json_path} "
+          f"({len(merged)} total, schema v{SCHEMA_VERSION})", file=out)
+
+
+def run_bench(preset: str = "full", fault: str = "all",
+              json_path: Optional[str] = None, seed: int = 0,
+              out=sys.stdout) -> List[dict]:
+    """The full sweep: clean + overload legs, then one leg per serve fault
+    point (``fault``: "all" / "none" / one point name).  In the smoke
+    preset the bounded-degradation acceptance bound is asserted: every
+    faulted leg's p99 < ``P99_BOUND`` x the clean p99."""
+    print(_COLS, file=out)
+    rows = [run_leg("clean", preset, seed=seed, out=out)]
+    clean_p99 = rows[0]["p99_ms"]
+    # overload: watermark far below the arrival count -> typed shedding
+    overload = run_leg("overload", preset, seed=seed,
+                       shed_watermark=max(2, PRESETS[preset]["slots"] // 2),
+                       out=out)
+    assert overload["shed"] > 0, (
+        "overload leg shed nothing: the watermark never engaged")
+    rows.append(overload)
+    points = (SERVE_POINTS if fault == "all"
+              else () if fault == "none" else (fault,))
+    for point in points:
+        leg = f"fault_{point.split('.', 1)[1]}"
+        row = run_leg(leg, preset, fault=point, seed=seed, out=out)
+        if preset == "smoke" and clean_p99 and row["p99_ms"]:
+            assert row["p99_ms"] < P99_BOUND * clean_p99, (
+                f"{leg}: p99 {row['p99_ms']:.1f}ms exceeds "
+                f"{P99_BOUND}x clean p99 {clean_p99:.1f}ms — "
+                f"degradation is not bounded")
+        rows.append(row)
+    if fault == "all":
+        print(f"[serve_load] {len(points)} faulted leg(s): zero "
+              f"lost/duplicated requests, server stayed up", file=out)
+    if json_path:
+        _merge_json(rows, json_path, out)
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="open-loop serve load benchmark (tokens/sec, p50/p99, "
+                    "faulted legs with bounded degradation)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest preset + assert the bounded-p99 and "
+                         "conservation contracts (the CI legs)")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--fault", default="all",
+                    help="'all' (default), 'none' (clean+overload only), "
+                         "or one serve.* point")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None,
+                    help="merge rows into this BENCH_serve.json (default: "
+                         "repo-root BENCH_serve.json; 'none' disables)")
+    args = ap.parse_args(argv)
+    preset = "smoke" if args.smoke else ("quick" if args.quick else "full")
+    if args.json == "none":
+        json_path = None
+    elif args.json:
+        json_path = args.json
+    else:
+        json_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_serve.json")
+    run_bench(preset=preset, fault=args.fault, json_path=json_path,
+              seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

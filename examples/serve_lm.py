@@ -40,8 +40,13 @@ def main():
     done = server.run(max_steps=500)
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.tokens_out) for r in done)
+    stats = server.stats
     print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s on CPU)")
+    print(f"  policy {server.policy} | completed {stats.completed} "
+          f"shed {stats.shed} timed-out {stats.timed_out} "
+          f"failed {stats.failed} | prefill batches {stats.prefill_batches} "
+          f"decode steps {stats.decode_steps}")
     for r in done[:4]:
         print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.tokens_out}")
 

@@ -4,11 +4,13 @@
     python scripts/update_experiments.py --transfer      # BENCH_transfer summary
     python scripts/update_experiments.py --transfer --old prev.json
                                                          # + cross-PR trajectory
+    python scripts/update_experiments.py --serve         # BENCH_serve summary
 
-The transfer mode reads BENCH_transfer.json through
+The transfer and serve modes read their JSON through
 ``benchmarks.bench_schema`` — rows of ANY schema vintage parse (schema-less
-v1 rows included), so adding columns (delta/sharded, schema v2) never
-breaks trajectory comparison against artifacts from older PRs.
+v1 rows included), so adding columns (delta/sharded, schema v2; serve,
+schema v7) never breaks trajectory comparison against artifacts from
+older PRs.
 """
 import argparse
 import os
@@ -20,6 +22,8 @@ sys.path.insert(0, ".")
 ROOFLINE_MARK = "<!-- ROOFLINE_TABLE -->"
 TRANSFER_BEGIN = "<!-- TRANSFER_TABLE_BEGIN -->"
 TRANSFER_END = "<!-- TRANSFER_TABLE_END -->"
+SERVE_BEGIN = "<!-- SERVE_TABLE_BEGIN -->"
+SERVE_END = "<!-- SERVE_TABLE_END -->"
 
 
 def _replace_section(text: str, begin: str, end: str, body: str) -> str:
@@ -112,18 +116,68 @@ def transfer_main(json_path: str, old_path: str = None) -> None:
           + (f" + trajectory vs {old_path}" if old_path else ""))
 
 
+def serve_main(json_path: str, old_path: str = None) -> None:
+    """Inject the BENCH_serve.json lifecycle table (schema-v7 serve rows:
+    the unit is requests, not passes)."""
+    from benchmarks import bench_schema
+
+    rows = [r for r in bench_schema.load_rows(json_path)
+            if r.get("family") == "serve"]
+    lines = ["| leg | policy | requests | tokens | tok/s | p50 ms | p99 ms |"
+             " shed | timed out | failed | retries | fault | fallbacks |",
+             "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        leg = r["scenario"].replace("serve_open_loop_", "")
+        lines.append(
+            f"| {leg} | `{r['policy']}` | {r['requests']} | {r['tokens']} | "
+            f"{r['tokens_per_s']} | {r['p50_ms']} | {r['p99_ms']} | "
+            f"{r['shed']} | {r['timed_out']} | {r['failed']} | "
+            f"{r['retries']} | {r['fault_point'] or ''} | "
+            f"{r['policy_fallbacks']} |")
+    body = (f"### Serving under load (BENCH_serve.json, schema "
+            f"v{bench_schema.SCHEMA_VERSION}, {len(rows)} legs)\n\n"
+            "Open-loop request stream against the TransferProgram-backed\n"
+            "server (`benchmarks.serve_load`): a clean leg, an overload leg\n"
+            "(shed watermark engaged — backpressure is a typed answer), and\n"
+            "one leg per `serve.*` fault point.  Every leg asserts the\n"
+            "lifecycle contract: each submitted request terminates in\n"
+            "exactly one state, and the server keeps completing requests\n"
+            "after each fault.  Serve rows carry p99 as `steady_wall_us`,\n"
+            "so the schema `--gate` covers request latency too.\n\n"
+            + "\n".join(lines))
+    if old_path:
+        cmp_rows = bench_schema.compare(bench_schema.load_rows(old_path),
+                                        rows, column="p99_ms")
+        body += ("\n\n### Serve trajectory vs previous PR (p99_ms)\n\n"
+                 "| leg | old | new | speedup |\n|---|---|---|---|\n")
+        body += "\n".join(
+            f"| {c['scenario'].replace('serve_open_loop_', '')} | "
+            f"{c['old_p99_ms'] or ''} | {c['new_p99_ms'] or ''} | "
+            f"{c['speedup'] or ''} |" for c in cmp_rows)
+    text = open("EXPERIMENTS.md").read() if os.path.exists("EXPERIMENTS.md") \
+        else f"# EXPERIMENTS\n\n{ROOFLINE_MARK}\n"
+    open("EXPERIMENTS.md", "w").write(
+        _replace_section(text, SERVE_BEGIN, SERVE_END, body))
+    print(f"injected {len(rows)} serve rows"
+          + (f" + trajectory vs {old_path}" if old_path else ""))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--transfer", action="store_true",
                     help="inject the BENCH_transfer.json summary instead of "
                          "the roofline table")
-    ap.add_argument("--json", default="BENCH_transfer.json")
+    ap.add_argument("--serve", action="store_true",
+                    help="inject the BENCH_serve.json lifecycle summary")
+    ap.add_argument("--json", default=None)
     ap.add_argument("--old", default=None,
-                    help="older BENCH_transfer.json (any schema vintage) to "
+                    help="older rows JSON (any schema vintage) to "
                          "diff the trajectory against")
     args = ap.parse_args()
     if args.transfer:
-        transfer_main(args.json, args.old)
+        transfer_main(args.json or "BENCH_transfer.json", args.old)
+    elif args.serve:
+        serve_main(args.json or "BENCH_serve.json", args.old)
     else:
         roofline_main()
 

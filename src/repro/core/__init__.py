@@ -19,8 +19,8 @@ from .schemes import (TransferLedger, TransferScheme, UVMScheme, MarshalScheme,
                       PointerChainScheme, SCHEMES, make_scheme,
                       transfer_scheme)
 from .policy import (PolicyRule, ProgramFuture, ProgramStats, Region,
-                     TransferPolicy, TransferProgram, UnsupportedPolicyError,
-                     compile_program, partition_tree)
+                     TransferPolicy, TransferProgram, TransferTimeout,
+                     UnsupportedPolicyError, compile_program, partition_tree)
 from .deepcopy import (full_deepcopy, selective_deepcopy, host_skeleton,
                        tree_bytes)
 
@@ -39,7 +39,7 @@ __all__ = [
     "TransferLedger", "TransferScheme", "UVMScheme", "MarshalScheme",
     "PointerChainScheme", "SCHEMES", "make_scheme", "transfer_scheme",
     "PolicyRule", "ProgramFuture", "ProgramStats", "Region", "TransferPolicy",
-    "TransferProgram", "UnsupportedPolicyError", "compile_program",
-    "partition_tree",
+    "TransferProgram", "TransferTimeout", "UnsupportedPolicyError",
+    "compile_program", "partition_tree",
     "full_deepcopy", "selective_deepcopy", "host_skeleton", "tree_bytes",
 ]

@@ -63,6 +63,24 @@ class UnsupportedPolicyError(UnsupportedSpecError):
     (duplicate patterns, missing ``**`` default, overlapping shard axes)."""
 
 
+class TransferTimeout(TimeoutError):
+    """A bounded wait on an asynchronous program pass expired before the
+    background barrier completed.
+
+    Raised by :meth:`ProgramFuture.result` when given a ``timeout``.  The
+    pass is left **un-materialized** — no finish bookkeeping ran, ledgers
+    and retained state are untouched — so ``result()`` may simply be
+    retried.  Latency-bounded callers (the serving prefill path) treat
+    this as the typed transient-fault signal for retry-with-backoff
+    instead of blocking a request forever behind a hung DMA."""
+
+    def __init__(self, waited_s: float, detail: str = ""):
+        msg = (f"async program pass still pending after {waited_s:.3f}s"
+               + (f" ({detail})" if detail else ""))
+        super().__init__(msg)
+        self.waited_s = waited_s
+
+
 # ---------------------------------------------------------------------------
 # patterns
 # ---------------------------------------------------------------------------
@@ -401,14 +419,34 @@ class ProgramFuture:
         yet materialized — ``result()`` still runs the finish stage)."""
         return self._synced.is_set()
 
-    def result(self) -> Any:
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the background barrier completes, at most ``timeout``
+        seconds (forever if ``None``).  Returns ``True`` when the barrier is
+        done, ``False`` on expiry — never raises, never materializes; the
+        cheap watchdog probe :meth:`result`'s bounded wait builds on."""
+        return self._synced.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None) -> Any:
         """Materialize the pass: residual barrier wait, per-region finish
-        bookkeeping, and the staged device tree (memoized)."""
+        bookkeeping, and the staged device tree (memoized).
+
+        With ``timeout`` (seconds), the residual barrier wait is bounded:
+        on expiry a typed :class:`TransferTimeout` is raised and the pass
+        stays un-materialized (no finish bookkeeping ran, ledgers are
+        untouched), so a later ``result()`` — with or without a timeout —
+        retries the wait instead of finding corrupted state.  PR 6's async
+        executor had no watchdog; a hung background barrier blocked the
+        caller forever.  Note the memoized fast path never times out: once
+        any call materialized the pass, every later call returns the tree."""
         with self._lock:
             if self._materialized:
                 return self._result
             t0 = time.perf_counter()
-            self._synced.wait()
+            if not self._synced.wait(timeout):
+                waited = time.perf_counter() - t0
+                raise TransferTimeout(
+                    waited, detail="pass not materialized; result() may be "
+                    "retried once the barrier completes")
             sync_s = time.perf_counter() - t0
             if self._error is not None:
                 raise self._error

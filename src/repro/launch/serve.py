@@ -31,6 +31,12 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="admission queue hard bound (submits shed above "
+                         "the watermark instead of buffering forever)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline; lapsed requests terminate "
+                         "typed (timed_out), not silently")
     args = ap.parse_args(argv)
 
     api = registry.get(args.arch, smoke=args.smoke)
@@ -43,20 +49,28 @@ def main(argv=None):
     else:
         params = api.init(jax.random.PRNGKey(0))
 
-    server = Server(api, params, slots=args.slots, max_seq=args.max_seq)
+    server = Server(api, params, slots=args.slots, max_seq=args.max_seq,
+                    max_queue=args.max_queue)
     rng = np.random.default_rng(0)
+    shed = 0
     for i in range(args.requests):
-        server.submit(Request(
+        verdict = server.submit(Request(
             rid=i,
             prompt=rng.integers(0, api.cfg.vocab_size,
                                 size=int(rng.integers(4, 16))).astype(np.int32),
-            max_new_tokens=args.max_new))
+            max_new_tokens=args.max_new,
+            deadline_s=args.deadline_s))
+        shed += verdict == "shed"
     t0 = time.perf_counter()
     done = server.run(max_steps=args.requests * args.max_new + 50)
     dt = time.perf_counter() - t0
     tok = sum(len(r.tokens_out) for r in done)
+    stats = server.stats
     print(f"served {len(done)}/{args.requests} requests, {tok} tokens, "
           f"{dt:.2f}s ({tok/max(dt,1e-9):.1f} tok/s)")
+    print(f"policy {server.policy} | completed {stats.completed} "
+          f"shed {stats.shed} timed-out {stats.timed_out} "
+          f"failed {stats.failed} retries {stats.retries_total}")
 
 
 if __name__ == "__main__":

@@ -1,17 +1,24 @@
+from .admission import (ACCEPTED, COMPLETED, FAILED, SHED, TIMED_OUT,
+                        AdmissionQueue, Backoff, LifecycleError,
+                        LifecycleTracker, RequestTimeout, ServeStats)
 from .faults import (FaultInjector, InjectedFault, ElasticResult, injected,
                      run_elastic, trajectory_diff)
 from .loop import (NodeFailure, RestoreError, StragglerWatchdog,
                    TrainLoopResult, run)
-from .serve import Request, Server
+from .serve import Request, Server, serve_transfer_policy
 from .train import (StatePrefetcher, abstract_train_state, init_error_state,
                     make_dp_train_step, make_train_step, replicate_state,
                     state_transfer_policy, train_state, train_state_axes)
 
-__all__ = ["FaultInjector", "InjectedFault", "ElasticResult", "injected",
+__all__ = ["ACCEPTED", "COMPLETED", "FAILED", "SHED", "TIMED_OUT",
+           "AdmissionQueue", "Backoff", "LifecycleError", "LifecycleTracker",
+           "RequestTimeout", "ServeStats",
+           "FaultInjector", "InjectedFault", "ElasticResult", "injected",
            "run_elastic", "trajectory_diff",
            "NodeFailure", "RestoreError", "StragglerWatchdog",
            "TrainLoopResult", "run",
-           "Request", "Server", "StatePrefetcher", "abstract_train_state",
+           "Request", "Server", "serve_transfer_policy",
+           "StatePrefetcher", "abstract_train_state",
            "init_error_state", "make_dp_train_step", "make_train_step",
            "replicate_state", "state_transfer_policy", "train_state",
            "train_state_axes"]

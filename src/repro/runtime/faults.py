@@ -19,6 +19,19 @@ Injection points (the commit/durability contract they probe is §11.2):
     ``ckpt.gc``       mid-GC: about to remove a retired step
     ``restore.h2d``   mid-restore: program pass enqueued, not materialized
 
+Serve points (DESIGN.md §12 — the request-lifecycle contract they probe:
+under any of these, every submitted request still terminates in exactly
+one state, and the server stays up):
+
+    ``serve.prefill_pack``  mid-prefill: prompt batch about to stage
+                            through the arena program (nothing committed)
+    ``serve.decode_step``   mid-decode: batched token step about to
+                            dispatch (cache not yet advanced)
+    ``serve.slot_refill``   mid-refill: free slots matched to queued
+                            requests, nothing popped or installed yet
+    ``serve.policy_swap``   mid-swap: ServeState about to re-stage under a
+                            new transfer policy
+
 An injected kill *unwinds* instead of killing the process, which is
 equivalent for these paths: nothing between a point and the enclosing
 handler mutates durable state, so the on-disk picture is exactly what a
@@ -43,7 +56,13 @@ POINTS = (
     "ckpt.commit",
     "ckpt.gc",
     "restore.h2d",
+    "serve.prefill_pack",
+    "serve.decode_step",
+    "serve.slot_refill",
+    "serve.policy_swap",
 )
+
+SERVE_POINTS = tuple(p for p in POINTS if p.startswith("serve."))
 
 
 class InjectedFault(RuntimeError):

@@ -101,7 +101,7 @@ def run(train_step: Callable, init_state_fn: Callable[[], Any],
         max_restarts: int = 3,
         state_shardings: Optional[Any] = None,
         state_policy: Optional[Any] = None,
-        mesh_size: Optional[int] = None,
+        mesh_size: Optional[Any] = None,
         watchdog: Optional[StragglerWatchdog] = None,
         log_every: int = 0) -> TrainLoopResult:
     """Run ``num_steps`` of training with checkpoint/restart semantics.
@@ -115,13 +115,19 @@ def run(train_step: Callable, init_state_fn: Callable[[], Any],
     checkpoint layer's own device placement).
 
     ``mesh_size`` is the surviving mesh's device count (default: every
-    visible device).  A ``state_policy`` derived for a DIFFERENT mesh —
-    the stale cluster config an elastic restart hands the new incarnation —
-    is recoverable, not fatal: the restore path re-derives it via
+    visible device) — an int, or a zero-arg callable the loop polls every
+    step (the live cluster view an elastic controller maintains).  A
+    ``state_policy`` derived for a DIFFERENT mesh — the stale cluster
+    config an elastic restart hands the new incarnation — is recoverable,
+    not fatal: the restore path re-derives it via
     ``TransferPolicy.reshard`` (counted in ``result.policy_reshards``) and
-    stages the checkpoint onto what actually survived.  Each restore's wall
-    is split into load (disk->host) / reshard (policy re-derivation +
-    program compile) / h2d (program pass + compute re-placement) in
+    stages the checkpoint onto what actually survived.  A mesh change
+    observed MID-RUN (not just at restore) re-derives the policy the same
+    way and re-places the live state onto the surviving devices, appending
+    a ``phase="run"`` entry to ``result.restore_splits``; restores after
+    the change compile directly for the new mesh.  Each restore's wall is
+    split into load (disk->host) / reshard (policy re-derivation + program
+    compile) / h2d (program pass + compute re-placement) in
     ``result.restore_splits``."""
     watchdog = watchdog or StragglerWatchdog()
     ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
@@ -132,6 +138,11 @@ def run(train_step: Callable, init_state_fn: Callable[[], Any],
     if state_policy is not None and state_shardings is not None:
         raise ValueError("state_policy and state_shardings are exclusive")
 
+    def observe_mesh() -> Optional[int]:
+        return mesh_size() if callable(mesh_size) else mesh_size
+
+    mesh_now = observe_mesh()
+
     def compile_restore_program(host):
         """Compile the state policy for the surviving mesh, re-deriving a
         stale one (wrong or over-sized dp axis) instead of dying."""
@@ -140,7 +151,7 @@ def run(train_step: Callable, init_state_fn: Callable[[], Any],
 
         policy = TransferPolicy.parse(state_policy)
         resharded = False
-        k = mesh_size if mesh_size is not None else jax.device_count()
+        k = mesh_now if mesh_now is not None else jax.device_count()
         if policy.num_shards > 1 and policy.num_shards != k:
             # the declared mesh is not the surviving mesh (n -> m elastic
             # restart): re-derive before compiling
@@ -188,24 +199,59 @@ def run(train_step: Callable, init_state_fn: Callable[[], Any],
                     t_h2d = time.perf_counter() - t2
                     restore_splits.append(dict(
                         step=step0, policy=str(policy), resharded=resharded,
-                        load_s=t_load, reshard_s=t_reshard, h2d_s=t_h2d))
+                        load_s=t_load, reshard_s=t_reshard, h2d_s=t_h2d,
+                        phase="restore"))
                 else:
                     t2 = time.perf_counter()
                     host = jax.tree_util.tree_map(jax.numpy.asarray, host)
                     restore_splits.append(dict(
                         step=step0, policy="", resharded=False,
                         load_s=t_load, reshard_s=0.0,
-                        h2d_s=time.perf_counter() - t2))
+                        h2d_s=time.perf_counter() - t2, phase="restore"))
             else:
                 restore_splits.append(dict(
                     step=step0, policy="", resharded=False,
-                    load_s=t_load, reshard_s=0.0, h2d_s=0.0))
+                    load_s=t_load, reshard_s=0.0, h2d_s=0.0,
+                    phase="restore"))
             return host, step0
         return init_state_fn(), 0
+
+    def on_mesh_change(state: Any, step: int, observed: Optional[int]) -> Any:
+        """PR 7 closed the stale-policy gap at RESTORE time only; this is
+        the RUN-phase half: a mesh change observed mid-run re-derives the
+        state policy via ``TransferPolicy.reshard`` (so later restores
+        compile directly for the live mesh) and re-places the live state
+        onto the surviving devices — a copy, not arithmetic, so the
+        trajectory stays bit-identical."""
+        nonlocal policy_reshards, state_policy
+        from ..core import TransferPolicy
+        from .train import replicate_state
+
+        t1 = time.perf_counter()
+        k = observed if observed is not None else jax.device_count()
+        survivors = max(1, min(k, jax.device_count()))
+        resharded = False
+        if state_policy is not None:
+            policy = TransferPolicy.parse(state_policy)
+            if policy.num_shards > 1 and policy.num_shards != survivors:
+                state_policy = policy.reshard(survivors)
+                policy_reshards += 1
+                resharded = True
+        t2 = time.perf_counter()
+        state = replicate_state(state, survivors)
+        restore_splits.append(dict(
+            step=step, policy=str(state_policy or ""), resharded=resharded,
+            load_s=0.0, reshard_s=t2 - t1,
+            h2d_s=time.perf_counter() - t2, phase="run"))
+        return state
 
     state, step = fresh_or_restored()
     while step < num_steps:
         try:
+            observed = observe_mesh()
+            if observed != mesh_now:
+                state = on_mesh_change(state, step, observed)
+                mesh_now = observed
             t0 = time.perf_counter()
             if failure_injector is not None:
                 failure_injector(step)

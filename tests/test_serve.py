@@ -1,11 +1,17 @@
-"""Serving runtime: continuous batching over prefill/decode."""
+"""Serving runtime: continuous batching over prefill/decode, plus the
+request lifecycle (admission, deadlines, faults, policy degradation)."""
+import threading
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import TransferSession, TransferTimeout
 from repro.models import registry
-from repro.runtime import Request, Server
+from repro.runtime import (ACCEPTED, SHED, LifecycleError, Request,
+                           RequestTimeout, Server, injected,
+                           serve_transfer_policy)
 
 
 @pytest.fixture(scope="module")
@@ -71,3 +77,219 @@ def test_eos_terminates_early(served):
                           eos_id=t2))
     done = server.run(max_steps=50)
     assert len(done) == 1 and len(done[0].tokens_out) == 2
+
+
+# -- lifecycle: admission, deadlines, faults, degradation -------------------
+
+def _mk_reqs(api, n, seed=0, max_new=5):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, api.cfg.vocab_size,
+                                        4 + (i % 5)).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def test_submit_sheds_above_watermark_and_conserves(served):
+    api, params = served
+    server = Server(api, params, slots=1, max_seq=64, max_queue=8,
+                    shed_watermark=2)
+    reqs = _mk_reqs(api, 5)
+    verdicts = [server.submit(r) for r in reqs]
+    assert verdicts == [ACCEPTED, ACCEPTED, SHED, SHED, SHED]
+    # shed requests are TERMINAL immediately — typed, not dropped
+    assert all(r.state == "shed" for r in reqs[2:])
+    done = server.run(max_steps=100)
+    assert {r.rid for r in done} == {0, 1, 2, 3, 4}
+    server.tracker.assert_conserved()
+    assert server.stats.shed == 3 and server.stats.completed == 2
+    assert server.stats.queue_high_water <= 2
+
+
+def test_duplicate_rid_is_a_lifecycle_error(served):
+    api, params = served
+    server = Server(api, params, slots=1, max_seq=64)
+    server.submit(Request(rid=7, prompt=np.asarray([1, 2], np.int32)))
+    with pytest.raises(LifecycleError, match="duplicate rid"):
+        server.submit(Request(rid=7, prompt=np.asarray([3], np.int32)))
+
+
+def test_deadline_expires_typed(served):
+    api, params = served
+    clock = {"t": 0.0}
+    server = Server(api, params, slots=1, max_seq=64,
+                    clock=lambda: clock["t"])
+    # slot hog with no deadline, then a queued request with a tight one
+    hog, victim = _mk_reqs(api, 2, max_new=10)
+    victim.deadline_s = 1.0
+    server.submit(hog)
+    server.tick()                     # hog takes the only slot
+    server.submit(victim)
+    clock["t"] = 5.0                  # the deadline lapses while queued
+    done = server.run(max_steps=100)
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[victim.rid].state == "timed_out"
+    assert isinstance(by_rid[victim.rid].error, RequestTimeout)
+    assert by_rid[victim.rid].error.where == "queued"
+    assert by_rid[hog.rid].state == "completed"
+    server.tracker.assert_conserved()
+
+
+def test_active_deadline_expires_typed(served):
+    api, params = served
+    clock = {"t": 0.0}
+    server = Server(api, params, slots=1, max_seq=64,
+                    clock=lambda: clock["t"])
+    req = _mk_reqs(api, 1, max_new=50)[0]
+    req.deadline_s = 1.0
+    server.submit(req)
+    server.tick()                     # prefilled into the slot
+    assert req.state == "active"
+    clock["t"] = 5.0
+    server.tick()
+    assert req.state == "timed_out"
+    assert isinstance(req.error, RequestTimeout) and req.error.where == "active"
+    server.tracker.assert_conserved()
+
+
+def test_torn_prefill_pack_retries_bit_identical(served):
+    """A fault mid-prefill-pack unwinds with nothing committed; the retry
+    re-stages the SAME batch and every token matches the clean run."""
+    api, params = served
+    clean = Server(api, params, slots=2, max_seq=64)
+    for r in _mk_reqs(api, 5):
+        clean.submit(r)
+    want = {r.rid: r.tokens_out for r in clean.run(max_steps=200)}
+
+    faulted = Server(api, params, slots=2, max_seq=64)
+    with injected("serve.prefill_pack", at=2) as inj:
+        for r in _mk_reqs(api, 5):
+            faulted.submit(r)
+        got = {r.rid: r.tokens_out for r in faulted.run(max_steps=200)}
+    assert inj.fired, "the fault never fired"
+    assert faulted.stats.retries.get("serve.prefill_pack") == 1
+    assert got == want, "retried prefill diverged from the clean run"
+    faulted.tracker.assert_conserved()
+    assert faulted.stats.completed == 5 and faulted.stats.failed == 0
+
+
+@pytest.mark.parametrize("point", ["serve.decode_step", "serve.slot_refill"])
+def test_injected_fault_retries_and_conserves(served, point):
+    api, params = served
+    server = Server(api, params, slots=2, max_seq=64)
+    with injected(point, at=2):
+        for r in _mk_reqs(api, 4):
+            server.submit(r)
+        done = server.run(max_steps=200)
+    assert len(done) == 4 and all(r.state == "completed" for r in done)
+    assert server.stats.retries.get(point) == 1
+    server.tracker.assert_conserved()
+
+
+def test_exhausted_retries_fail_typed_and_server_stays_up(served):
+    """With retries disabled, one injected decode fault fails the ACTIVE
+    requests typed — and the server keeps serving the queue."""
+    from repro.runtime import InjectedFault
+
+    api, params = served
+    server = Server(api, params, slots=1, max_seq=64, max_retries=0)
+    reqs = _mk_reqs(api, 3)
+    with injected("serve.decode_step", at=1):
+        for r in reqs:
+            server.submit(r)
+        done = server.run(max_steps=200)
+    assert len(done) == 3
+    states = {r.rid: r.state for r in done}
+    assert states[0] == "failed"          # was active when the fault hit
+    assert isinstance(reqs[0].error, InjectedFault)
+    assert states[1] == states[2] == "completed"   # server stayed up
+    server.tracker.assert_conserved()
+
+
+def test_stale_mesh_policy_degrades_loudly_and_serves(served):
+    """A policy declared for a mesh that does not exist reshards down the
+    degradation ladder instead of killing the server — counted, described,
+    and still serving bit-identical tokens."""
+    api, params = served
+    k = jax.device_count()
+    clean = Server(api, params, slots=2, max_seq=64)
+    for r in _mk_reqs(api, 3):
+        clean.submit(r)
+    want = {r.rid: r.tokens_out for r in clean.run(max_steps=200)}
+
+    stale = Server(api, params, slots=2, max_seq=64,
+                   policy=serve_transfer_policy(2 * k))
+    assert stale.stats.policy_fallbacks >= 1
+    assert stale.stats.degradations                 # never silent
+    assert stale.policy.num_shards in (1, k)
+    for r in _mk_reqs(api, 3):
+        stale.submit(r)
+    got = {r.rid: r.tokens_out for r in stale.run(max_steps=200)}
+    assert got == want
+    stale.tracker.assert_conserved()
+
+
+def test_swap_policy_mid_serving_keeps_tokens(served):
+    """Swapping the ServeState transfer policy between ticks re-stages the
+    live state (D2H under the old program, H2D under the new) without
+    perturbing any in-flight request."""
+    api, params = served
+    clean = Server(api, params, slots=2, max_seq=64)
+    for r in _mk_reqs(api, 4, max_new=6):
+        clean.submit(r)
+    want = {r.rid: r.tokens_out for r in clean.run(max_steps=200)}
+
+    server = Server(api, params, slots=2, max_seq=64)
+    for r in _mk_reqs(api, 4, max_new=6):
+        server.submit(r)
+    for _ in range(3):
+        server.tick()
+    server.swap_policy("**=marshal")
+    assert str(server.policy) == "**=marshal"
+    got = {r.rid: r.tokens_out for r in server.run(max_steps=200)}
+    assert got == want, "policy swap perturbed in-flight decode state"
+    server.tracker.assert_conserved()
+
+
+def test_run_returns_requests_submitted_after_start(served):
+    """The old Server.run snapshotted `pending` once: late submits were
+    invisible to the return value.  The tracker-backed run returns them."""
+    api, params = served
+    server = Server(api, params, slots=1, max_seq=64)
+    early, late = _mk_reqs(api, 2, max_new=3)
+    server.submit(early)
+    server.tick()
+    server.submit(late)               # submitted AFTER serving began
+    done = server.run(max_steps=100)
+    assert {r.rid for r in done} == {early.rid, late.rid}
+    assert all(r.state == "completed" for r in done)
+
+
+# -- ProgramFuture bounded waits --------------------------------------------
+
+def test_program_future_result_timeout_is_typed_and_retryable(monkeypatch):
+    """result(timeout=) raises TransferTimeout on a hung barrier and leaves
+    the pass un-materialized: a later result() retries and succeeds."""
+    session = TransferSession()
+    tree = {"a": np.arange(64, dtype=np.float32)}
+    program = session.compile(tree, "**=marshal")
+    release = threading.Event()
+    real_block = jax.block_until_ready
+
+    def slow_block(x):
+        if threading.current_thread().name == "transfer-program-sync":
+            release.wait(10.0)
+        return real_block(x)
+
+    monkeypatch.setattr(jax, "block_until_ready", slow_block)
+    fut = program.to_device_async(tree)
+    assert fut.wait(timeout=0.01) is False
+    with pytest.raises(TransferTimeout):
+        fut.result(timeout=0.05)
+    assert not fut.done()
+    release.set()
+    out = fut.result(timeout=10.0)    # retry materializes cleanly
+    assert fut.wait() is True
+    np.testing.assert_array_equal(np.asarray(out["a"]), tree["a"])
+    # memoized fast path never times out
+    assert fut.result(timeout=0.0) is out

@@ -1,0 +1,210 @@
+"""Property tests for the serving lifecycle (hypothesis).
+
+The serve invariants are stated over ALL schedules, not a handful of
+hand-picked ones:
+
+  * conservation — every submitted rid terminates in exactly one terminal
+    state under any interleaving of arrivals, faults, shedding, and
+    deadlines (and failures/expiries carry typed errors);
+  * determinism — the same schedule replayed against a fresh server
+    produces bit-identical tokens, states, and retry counts;
+  * boundedness — the admission queue's observed depth never exceeds its
+    watermark, under the server and as a pure-queue property.
+
+A deterministic toy model (`_MiniApi`: logits are a one-hot of
+``(last_token * 7 + pos) % vocab``) keeps examples fast while still
+driving the REAL server — batched arena prefill, fused cache install,
+admission, retries — through the same code paths as the llama tests.
+A fake clock advances one second per tick so deadline schedules are
+exact, not wall-time flaky.
+"""
+import dataclasses
+import types
+
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.runtime import Request, RequestTimeout, Server, injected  # noqa: E402
+from repro.runtime.admission import (ACCEPTED, SHED, TERMINAL_STATES,  # noqa: E402
+                                     AdmissionQueue)
+from repro.runtime.faults import SERVE_POINTS  # noqa: E402
+from repro.runtime.serve import TRANSIENT_FAULTS  # noqa: E402
+
+VOCAB = 32
+SLOTS = 3          # fixed so the jit caches stay warm across examples
+MAX_SEQ = 32
+MAX_TICKS = 200
+
+
+class _MiniApi:
+    """Deterministic toy model with the ModelApi surface Server uses.
+
+    The KV mirror is (L=1, B, S) — shape[1] == slots — so the fused cache
+    install exercises the (L, B, ...) scatter layout, and "pos" the (B,)
+    layout, exactly like the real models."""
+
+    cfg = types.SimpleNamespace(vocab_size=VOCAB)
+
+    def init_cache(self, b, s):
+        return {"pos": jnp.zeros((b,), jnp.int32),
+                "k": jnp.zeros((1, b, s), jnp.float32)}
+
+    def prefill(self, params, tokens, cache):
+        b, p = tokens.shape
+        k = cache["k"].at[0, :, :p].set(tokens.astype(jnp.float32))
+        positions = jnp.arange(p, dtype=jnp.int32)[None, :]
+        logits = jax.nn.one_hot((tokens * 7 + positions) % VOCAB, VOCAB)
+        return logits, {"pos": jnp.full((b,), p, jnp.int32), "k": k}
+
+    def decode_step(self, params, tokens, cache):
+        tok = tokens[:, 0]
+        pos = cache["pos"]
+        k = cache["k"].at[0, jnp.arange(tok.shape[0]), pos].set(
+            tok.astype(jnp.float32))
+        logits = jax.nn.one_hot((tok * 7 + pos) % VOCAB, VOCAB)[:, None, :]
+        return logits, {"pos": pos + 1, "k": k}
+
+
+_API = _MiniApi()
+_PARAMS = {"w": np.ones((8,), np.float32)}
+
+
+@st.composite
+def schedules(draw):
+    n = draw(st.integers(1, 7))
+    return dict(
+        prompts=[draw(st.lists(st.integers(0, VOCAB - 1),
+                               min_size=1, max_size=6)) for _ in range(n)],
+        deadlines=[draw(st.one_of(st.none(), st.integers(1, 8)))
+                   for _ in range(n)],
+        max_new=draw(st.integers(2, 5)),
+        fault=draw(st.sampled_from((None,) + SERVE_POINTS)),
+        at=draw(st.integers(1, 3)),
+        watermark=draw(st.one_of(st.none(), st.integers(1, 3))),
+        max_retries=draw(st.integers(0, 2)),
+    )
+
+
+def _serve(schedule):
+    """Build a server and drive the schedule: one arrival per tick, the
+    fake clock advancing 1s/tick, until drained.  Returns (server, reqs);
+    server is None when an unretried install fault killed construction
+    BEFORE any submit (typed, zero requests lost — vacuous conservation)."""
+    reqs = [Request(rid=i, prompt=np.asarray(p, np.int32),
+                    max_new_tokens=schedule["max_new"],
+                    deadline_s=None if d is None else float(d))
+            for i, (p, d) in enumerate(zip(schedule["prompts"],
+                                           schedule["deadlines"]))]
+    t = [0.0]
+
+    def drive():
+        server = Server(_API, _PARAMS, slots=SLOTS, max_seq=MAX_SEQ,
+                        max_queue=16, shed_watermark=schedule["watermark"],
+                        max_retries=schedule["max_retries"],
+                        backoff_base_s=0.0, clock=lambda: t[0])
+        i = 0
+        for _ in range(MAX_TICKS):
+            if i < len(reqs):
+                server.submit(reqs[i])
+                i += 1
+            more = server.tick()
+            t[0] += 1.0
+            if i >= len(reqs) and not more:
+                break
+        return server
+
+    try:
+        if schedule["fault"]:
+            with injected(schedule["fault"], at=schedule["at"]):
+                return drive(), reqs
+        return drive(), reqs
+    except TRANSIENT_FAULTS:
+        # retries exhausted while INSTALLING the initial policy: the server
+        # never came up and no request was ever submitted
+        return None, reqs
+
+
+@given(schedules())
+@settings(max_examples=20, deadline=None)
+def test_every_request_terminates_exactly_once(schedule):
+    server, reqs = _serve(schedule)
+    if server is None:
+        return
+    server.tracker.assert_conserved()
+    assert server.stats.submitted == len(reqs)
+    assert server.stats.terminal == server.stats.submitted
+    finished = server.tracker.finished()
+    assert len(finished) == len({r.rid for r in finished}) == len(reqs)
+    for req in reqs:
+        assert req.state in TERMINAL_STATES
+        if req.state == "failed":
+            assert isinstance(req.error, TRANSIENT_FAULTS)
+        elif req.state == "timed_out":
+            assert isinstance(req.error, RequestTimeout)
+        else:
+            assert req.error is None
+
+
+@given(schedules())
+@settings(max_examples=10, deadline=None)
+def test_same_schedule_replays_bit_identical(schedule):
+    def fingerprint(server, reqs):
+        if server is None:
+            return None
+        return ([(r.rid, r.state, tuple(r.tokens_out)) for r in reqs],
+                server.stats.retries, server.tracker.counts())
+
+    assert fingerprint(*_serve(schedule)) == fingerprint(*_serve(schedule))
+
+
+@given(schedules())
+@settings(max_examples=20, deadline=None)
+def test_queue_never_exceeds_its_bound(schedule):
+    server, reqs = _serve(schedule)
+    if server is None:
+        return
+    bound = schedule["watermark"] if schedule["watermark"] is not None else 16
+    assert server.stats.queue_high_water <= bound
+    # shed verdicts are terminal immediately: shed + every other terminal
+    # adds up — nothing both shed and served
+    counts = server.tracker.counts()
+    assert counts["shed"] == server.stats.shed
+    assert sum(counts.values()) == len(reqs)
+
+
+# -- pure-queue property (no JAX, no server) --------------------------------
+
+@dataclasses.dataclass
+class _Stub:
+    rid: int
+    submitted_at: float = 0.0
+    deadline_s: float = None
+
+
+@given(st.integers(1, 6), st.integers(1, 8),
+       st.lists(st.sampled_from(["submit", "pop", "expire"]), max_size=60))
+@settings(max_examples=50, deadline=None)
+def test_admission_queue_depth_bounded_pure(watermark, capacity, ops):
+    q = AdmissionQueue(capacity=capacity, shed_watermark=watermark)
+    bound = min(watermark, capacity)
+    now, rid, live = 0.0, 0, 0
+    for op in ops:
+        if op == "submit":
+            verdict = q.submit(_Stub(rid=rid, submitted_at=now,
+                                     deadline_s=2.0 if rid % 3 == 0 else None))
+            assert verdict == (SHED if live >= bound else ACCEPTED)
+            live += verdict == ACCEPTED
+            rid += 1
+        elif op == "pop":
+            live -= len(q.pop(1))
+        else:
+            now += 1.5
+            live -= len(q.expire(now))
+        assert len(q) == live <= bound
+    assert q.high_water <= bound

@@ -84,6 +84,58 @@ def test_restore_via_state_policy_matches_default(setup, tmp_path):
     assert int(res_b.state["step"]) == 12
 
 
+def test_run_phase_mesh_shrink_reshards_instead_of_dying(setup, tmp_path):
+    """PR 7 left mid-RUN mesh changes open: the loop only re-derived a
+    stale state policy at restore time.  A mesh shrink OBSERVED WHILE
+    RUNNING (mesh_size as a live callable) must re-derive the policy and
+    re-place the state — and a later restore must compile directly for
+    the live mesh — with a bit-identical trajectory throughout."""
+    from repro.runtime import trajectory_diff
+    from repro.runtime.train import state_transfer_policy
+
+    api, opt, step, data = setup
+    init = lambda: train_state(api, opt, jax.random.PRNGKey(7))
+    res_ref = run(step, init, lambda s: data.batch(s), num_steps=12)
+
+    K = jax.device_count()
+    stale = 2 * K                    # the pre-shrink cluster config
+    mesh = {"size": stale}
+    boom = {"armed": True}
+
+    def injector(s):
+        # a node loss AFTER the shrink: the restore must use the
+        # re-derived policy, not the stale dp{2K} one
+        if s == 9 and boom["armed"]:
+            boom["armed"] = False
+            raise NodeFailure("simulated pod loss")
+
+    def data_fn(s):
+        if s >= 6:
+            mesh["size"] = K         # the controller reports the shrink
+        return data.batch(s)
+
+    res = run(step, init, data_fn, num_steps=12,
+              ckpt_dir=str(tmp_path / "ckm"), ckpt_every=4,
+              failure_injector=injector,
+              state_policy=state_transfer_policy(stale),
+              mesh_size=lambda: mesh["size"])
+    assert res.restarts == 1
+    # exactly ONE re-derivation: the mid-run shrink rewrote the policy, so
+    # the post-failure restore compiled clean for the live mesh
+    assert res.policy_reshards == 1
+    run_entries = [sp for sp in res.restore_splits
+                   if sp.get("phase") == "run"]
+    assert len(run_entries) == 1 and run_entries[0]["resharded"]
+    assert f"dp{stale}" not in run_entries[0]["policy"]
+    restore_entries = [sp for sp in res.restore_splits
+                       if sp.get("phase") == "restore"]
+    assert restore_entries and not any(sp["resharded"]
+                                       for sp in restore_entries)
+    assert trajectory_diff(res_ref.metrics_history,
+                           res.metrics_history) == []
+    assert int(res.state["step"]) == 12
+
+
 def test_state_policy_and_shardings_are_exclusive(setup):
     api, opt, step, data = setup
     with pytest.raises(ValueError, match="exclusive"):
