@@ -40,6 +40,7 @@ def _measure_whole_tree(tree, paths):
     jaxpr = jax.make_jaxpr(fn)(tree)
     lowered = jax.jit(fn).lower(tree)
     jitted = jax.jit(fn)
+    # lint: allow=DC201 -- jit warmup sync before timing
     jax.block_until_ready(jax.tree_util.tree_leaves(jitted(tree))[0])
     disp = bench("whole", lambda: jitted(tree), min_time=0.05, repeats=2)
     return {"invars": len(jaxpr.jaxpr.invars), "eqns": len(jaxpr.eqns),
@@ -56,6 +57,7 @@ def _measure_pointerchain(tree, paths):
     jaxpr = jax.make_jaxpr(fn)(*leaves)
     lowered = jax.jit(fn).lower(*leaves)
     jitted = jax.jit(fn)
+    # lint: allow=DC201 -- jit warmup sync before timing
     jax.block_until_ready(jitted(*leaves)[0])
     disp = bench("pc", lambda: jitted(*leaves), min_time=0.05, repeats=2)
     return {"invars": len(jaxpr.jaxpr.invars), "eqns": len(jaxpr.eqns),

@@ -166,7 +166,8 @@ def main(argv=None) -> None:
             (n_tiles * mk.SUBLANE, mk.LANE)), jnp.float32)
         tmap = jnp.asarray(np.random.default_rng(1).permutation(n_tiles)
                            .astype(np.int32))
-        fn = lambda: jax.block_until_ready(
+        fn = lambda: jax.block_until_ready(  # lint: allow=DC201 -- timed kernel sync
+
             mk.gather_tiles(src, tmap, interpret=True))
         r = bench("marshal_pack_interpret", fn, min_time=0.05, repeats=2)
         mb = src.nbytes / 1e6

@@ -56,6 +56,7 @@ _COLS = ("scenario,policy,sum_region_wall_us,cached_wall_us,"
 
 
 def _block(dev) -> None:
+    # lint: allow=DC201 -- benchmark measures the raw barrier itself
     jax.block_until_ready([l for l in jax.tree_util.tree_leaves(dev)
                            if isinstance(l, jax.Array)])
 
@@ -169,6 +170,7 @@ def _median_step_us(state, step, steps: int,
     for i in range(steps):
         t0 = time.perf_counter()
         s = step(s)
+        # lint: allow=DC201 -- per-step compute sync in the timed loop
         jax.block_until_ready(s["params"]["w"])
         if ckpt is not None and (i + 1) % ckpt_every == 0:
             ckpt.save(s, i + 1)
@@ -188,6 +190,7 @@ def _ckpt_row(n: int, steps: int, ckpt_every: int,
     step = _make_step(state)
     # warm the jit + the snapshot arena before any timed step
     state = step(state)
+    # lint: allow=DC201 -- jit warmup sync before timing
     jax.block_until_ready(state["params"]["w"])
 
     # ckpt-off is measured BEFORE AND AFTER the ckpt-on block, and the

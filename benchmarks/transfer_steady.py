@@ -61,7 +61,7 @@ def _one_transfer(scheme, sc: Scenario, tree: Any) -> float:
                           uvm_access=list(sc.uvm_access)
                           if sc.uvm_access else None,
                           declare_refs=False)
-    jax.block_until_ready(dev)
+    jax.block_until_ready(dev)  # lint: allow=DC201 -- timing the transfer itself
     return time.perf_counter() - t0
 
 

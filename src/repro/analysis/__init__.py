@@ -1,0 +1,52 @@
+"""repro.analysis — the transfer sanitizer suite (DESIGN.md §13).
+
+Three checking layers over one diagnostic-code taxonomy
+(:mod:`.diagnostics`):
+
+  * :mod:`.check`     — static policy/program analyzer (DC1xx): shadowed
+                        rules, zero-leaf rules, shard tail padding,
+                        mixed-device regions, delta-without-reuse, stale
+                        meshes — runnable over the whole scenario registry
+                        (``python -m repro.analysis.check``).
+  * :mod:`.sanitizer` — opt-in runtime staging race sanitizer (DC3xx): a
+                        happens-before shadow state machine per (bucket,
+                        buffer) hooked into the arena engine
+                        (``REPRO_SANITIZE=1`` /
+                        ``TransferSession(sanitize=True)``).
+  * :mod:`.lint`      — AST repo lint (DC2xx): raw transfer/sync calls,
+                        unknown fault-point literals, unparseable
+                        spec/policy literals, in-place arena writes without
+                        ``mark_dirty`` (``python -m repro.analysis.lint``).
+
+``check`` and ``lint`` import the core; they are loaded lazily here so the
+core engine can import :mod:`.sanitizer` (stdlib + numpy only) without a
+cycle.
+"""
+from . import diagnostics, sanitizer
+from .diagnostics import Diagnostic, errors
+from .sanitizer import StagingRaceError, SyncDisciplineError
+
+__all__ = ["Diagnostic", "StagingRaceError", "SyncDisciplineError",
+           "check", "check_policy", "check_registry", "diagnostics",
+           "errors", "lint", "lint_paths", "lint_repo", "sanitizer"]
+
+_LAZY = {
+    "check": ("repro.analysis.check", None),
+    "check_policy": ("repro.analysis.check", "check_policy"),
+    "check_registry": ("repro.analysis.check", "check_registry"),
+    "lint": ("repro.analysis.lint", None),
+    "lint_paths": ("repro.analysis.lint", "lint_paths"),
+    "lint_repo": ("repro.analysis.lint", "lint_repo"),
+}
+
+
+def __getattr__(name: str):
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    module = importlib.import_module(target[0])
+    value = module if target[1] is None else getattr(module, target[1])
+    globals()[name] = value
+    return value

@@ -1,0 +1,212 @@
+"""Static policy/program analyzer (DC1xx) — DESIGN.md §13.1.
+
+Given a concrete tree(def), a :class:`~repro.core.policy.TransferPolicy`
+and a mesh size, predict — BEFORE compiling a program — the policy
+mistakes the runtime either silently absorbs or only surfaces deep inside
+execution:
+
+  DC101  shadowed rule: matches leaves but a more specific rule always wins
+  DC102  zero-leaf rule: matches nothing in this treedef
+  DC103  shard tail padding: per-device padding dominates a region's bytes
+  DC104  mixed-device region set: device pins disagree / pin + dp-shard mix
+  DC105  delta region without steady-state reuse (pays double-buffer rent)
+  DC106  policy sharded wider than the mesh (ERROR: compile would raise)
+
+Everything here is pure host-side analysis over ``partition_tree`` and
+``arena.plan`` — no device transfers, no program compilation — so it is
+safe to run over the whole scenario registry in CI
+(``python -m repro.analysis.check``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Any, Dict, List, Optional, Union
+
+from ..core.arena import plan
+from ..core.policy import TransferPolicy, partition_tree
+from ..core.treepath import leaf_paths
+from .diagnostics import Diagnostic, errors
+
+# a sharded region whose tail padding exceeds this fraction of its padded
+# arena moves mostly padding bytes per pass — flag it (DC103).
+TAIL_PADDING_WARN = 0.25
+
+
+def _mesh_size(mesh_size: Optional[int]) -> int:
+    if mesh_size is not None:
+        return int(mesh_size)
+    import jax
+
+    return jax.device_count()
+
+
+def check_policy(tree: Any, policy: Union[str, TransferPolicy],
+                 mesh_size: Optional[int] = None,
+                 steady_reuse: Optional[bool] = None,
+                 where: str = "policy") -> List[Diagnostic]:
+    """All DC1xx diagnostics for one (treedef, policy, mesh) triple.
+
+    ``steady_reuse`` declares whether the workload re-ships this tree
+    steadily with partial mutation (the condition under which a delta
+    region earns its double-buffer rent); ``None`` means unknown and
+    skips DC105.  Returns diagnostics in code order; empty means clean.
+    """
+    policy = TransferPolicy.parse(policy)
+    out: List[Diagnostic] = []
+    mesh = _mesh_size(mesh_size)
+
+    if policy.num_shards > mesh:
+        out.append(Diagnostic(
+            "DC106",
+            f"policy shards over {policy.num_shards} devices but the "
+            f"mesh has {mesh}; compiling would raise at executor "
+            f"construction",
+            where=where))
+
+    paths = leaf_paths(tree)
+    matches: Dict[str, int] = {r.pattern: 0 for r in policy.rules}
+    wins: Dict[str, int] = {r.pattern: 0 for r in policy.rules}
+    for path in paths:
+        for rule in policy.rules:
+            if rule._match_steps(path.steps):
+                matches[rule.pattern] += 1
+        wins[policy.match(path).pattern] += 1
+
+    for rule in policy.rules:
+        if rule.pattern == "**":
+            # the required default legitimately idles when every leaf has
+            # a more specific home; it can't be "dead" in the DC101/102
+            # sense.
+            continue
+        if matches[rule.pattern] == 0:
+            out.append(Diagnostic(
+                "DC102",
+                f"rule {rule} matches no leaf of this treedef",
+                where=where))
+        elif wins[rule.pattern] == 0:
+            out.append(Diagnostic(
+                "DC101",
+                f"rule {rule} is shadowed: it matches "
+                f"{matches[rule.pattern]} leaves but more specific rules "
+                f"win every one",
+                where=where))
+
+    regions = partition_tree(tree, policy)
+    leaves = _flat_leaves(tree)
+
+    for pattern, region in regions.items():
+        spec = region.rule.spec
+        k = spec.num_shards
+        if k > 1:
+            sub = [leaves[i] for i in region.indices]
+            padded = plan(sub, align_elems=spec.align_elems,
+                          shard_multiple=k)
+            tight = plan(sub, align_elems=spec.align_elems)
+            total = padded.total_bytes()
+            pad = total - tight.total_bytes()
+            if total and pad / total > TAIL_PADDING_WARN:
+                out.append(Diagnostic(
+                    "DC103",
+                    f"region {pattern!r} @dp{k}: {pad} of {total} arena "
+                    f"bytes ({pad / total:.0%}) are shard tail padding "
+                    f"(> {TAIL_PADDING_WARN:.0%}); pad leaf sizes toward "
+                    f"a multiple of the mesh or shrink the mesh",
+                    where=where))
+        if spec.delta and steady_reuse is False:
+            out.append(Diagnostic(
+                "DC105",
+                f"region {pattern!r} uses a delta spec ({spec}) but the "
+                f"workload declares no steady-state reuse; every pass "
+                f"re-ships all buckets while paying double-buffer rent",
+                where=where))
+
+    pinned = {r.pattern: r.spec.device for r in
+              (rg.rule for rg in regions.values())
+              if r.spec.device is not None}
+    sharded = [rg.rule.pattern for rg in regions.values()
+               if rg.rule.spec.num_shards > 1]
+    if len(set(pinned.values())) > 1:
+        detail = ", ".join(f"{p}→dev{d}" for p, d in sorted(pinned.items()))
+        out.append(Diagnostic(
+            "DC104",
+            f"regions pin different devices ({detail}); one program pass "
+            f"will interleave H2D streams across devices",
+            where=where))
+    elif pinned and sharded:
+        out.append(Diagnostic(
+            "DC104",
+            f"regions mix a device pin ({sorted(pinned)}) with dp-sharded "
+            f"regions ({sorted(sharded)}); the pinned region serializes "
+            f"against one device of the mesh",
+            where=where))
+
+    out.sort(key=lambda d: d.code)
+    return out
+
+
+def _flat_leaves(tree: Any) -> List[Any]:
+    import jax
+
+    return jax.tree_util.tree_flatten(tree)[0]
+
+
+def check_scenario(sc: Any, mesh_size: Optional[int] = None
+                   ) -> List[Diagnostic]:
+    """DC1xx diagnostics for one registry scenario's declared policy
+    (empty when it declares none).  Steady reuse is read off the scenario:
+    ``params['mutate_paths']`` or a declared steady region expectation
+    signal a steady-state loop."""
+    policy = sc.policy()
+    if policy is None:
+        return []
+    steady_reuse = bool(sc.params.get("mutate_paths")) \
+        or sc.steady_region_expected is not None
+    return check_policy(sc.build(), policy, mesh_size=mesh_size,
+                        steady_reuse=steady_reuse, where=sc.name)
+
+
+def check_registry(size: str = "quick", mesh_size: Optional[int] = None
+                   ) -> Dict[str, List[Diagnostic]]:
+    """Run :func:`check_scenario` over every registry scenario that
+    declares a policy.  Keys are scenario names; clean scenarios map to
+    empty lists (so the caller can also assert coverage)."""
+    from ..scenarios import iter_scenarios
+
+    out: Dict[str, List[Diagnostic]] = {}
+    for sc in iter_scenarios(size):
+        if sc.declared_policy is None:
+            continue
+        out[sc.name] = check_scenario(sc, mesh_size=mesh_size)
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="Static DC1xx analysis of every declared scenario "
+                    "policy in the registry.")
+    ap.add_argument("--size", default="quick",
+                    choices=("smoke", "quick", "full"))
+    ap.add_argument("--mesh-size", type=int, default=None,
+                    help="analyze as if the mesh had this many devices "
+                         "(default: jax.device_count())")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on warnings too, not just errors")
+    args = ap.parse_args(argv)
+
+    results = check_registry(args.size, mesh_size=args.mesh_size)
+    n_diags = n_errors = 0
+    for name in sorted(results):
+        for diag in results[name]:
+            n_diags += 1
+            n_errors += diag.is_error
+            print(diag)
+    print(f"checked {len(results)} declared policies "
+          f"(mesh={_mesh_size(args.mesh_size)}): "
+          f"{n_errors} errors, {n_diags - n_errors} warnings")
+    return 1 if (n_errors or (args.strict and n_diags)) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

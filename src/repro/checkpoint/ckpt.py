@@ -33,6 +33,7 @@ import numpy as np
 
 from ..core import arena as arena_lib
 from ..core.treepath import TreePath, leaf_paths
+from ..faultpoints import CKPT_COMMIT, CKPT_GC, CKPT_PACK, CKPT_WRITE
 
 _FLAG = "manifest.json"
 _OLD_SUFFIX = ".old"
@@ -119,7 +120,7 @@ def _commit(tmp: str, final: str) -> None:
         if os.path.exists(old):
             shutil.rmtree(old)            # stale leftover of a prior crash
         os.rename(final, old)
-    _trip("ckpt.commit")                  # the commit window: old aside,
+    _trip(CKPT_COMMIT)                  # the commit window: old aside,
     os.rename(tmp, final)                 # new not yet in place
     _fsync_dir(os.path.dirname(final) or ".")
     if os.path.isdir(old):
@@ -145,7 +146,7 @@ def _write_step(host_state: Any, buffers: Dict[str, np.ndarray],
             buf.tofile(f)
             f.flush()
             os.fsync(f.fileno())
-    _trip("ckpt.write")                   # buckets on disk, no manifest yet
+    _trip(CKPT_WRITE)                   # buckets on disk, no manifest yet
 
     paths = [str(p) for p in leaf_paths(host_state)]
     manifest = {
@@ -300,6 +301,7 @@ def restore(directory: str, step: Optional[int] = None, *,
         raise ValueError(
             f"sharding tree does not match checkpoint tree: first "
             f"divergence — {diverge}")
+    # lint: allow=DC201 -- restore fallback when no session program exists
     flat_d = [jax.device_put(h, s) for h, s in zip(flat_h, flat_s)]
     return jax.tree_util.tree_unflatten(tdef_h, flat_d)
 
@@ -389,7 +391,7 @@ class AsyncCheckpointer:
                 # the D2H is already in flight; asarray only waits it out
                 host = [np.asarray(l) for l in leaves]
                 arena_lib.pack_into(bufs, layout, host)
-                _trip("ckpt.pack")    # snapshot staged, nothing written yet
+                _trip(CKPT_PACK)    # snapshot staged, nothing written yet
                 host_state = jax.tree_util.tree_unflatten(treedef, host)
                 _write_step(host_state, bufs, layout, self.directory, step,
                             extra_meta, t0, commit=self._commit)
@@ -419,5 +421,5 @@ class AsyncCheckpointer:
     def _gc(self):
         steps = available_steps(self.directory)
         for s in steps[:-self.keep]:
-            _trip("ckpt.gc")          # about to retire a durable step
+            _trip(CKPT_GC)          # about to retire a durable step
             shutil.rmtree(_step_dir(self.directory, s), ignore_errors=True)

@@ -62,6 +62,11 @@ import numpy as np
 
 from . import arena as arena_lib
 from .arena import ArenaLayout
+# the staging race sanitizer (repro.analysis.sanitizer is a leaf module:
+# stdlib + numpy, no core imports).  Every hook below guards on
+# `_sanitizer._ACTIVE is not None` — one module-global read when disabled,
+# the same fast-path shape as faults.trip.
+from ..analysis import sanitizer as _sanitizer
 
 Buffers = arena_lib.Buffers
 
@@ -133,7 +138,13 @@ class TransferSession:
     spec-less scheme construction use; an isolated session gives a workload
     its own caches and retained-state lifecycle."""
 
-    def __init__(self, layout_max: int = None, entry_max: int = None):
+    def __init__(self, layout_max: int = None, entry_max: int = None,
+                 sanitize: bool = False):
+        if sanitize:
+            # the shadow machine is process-wide (entries/schemes have no
+            # back-pointer to their session); the kwarg is the ergonomic
+            # opt-in next to REPRO_SANITIZE=1 (DESIGN.md §13.3)
+            _sanitizer.enable()
         self.layout_max = LAYOUT_CACHE_MAX if layout_max is None else int(layout_max)
         self.entry_max = ENTRY_CACHE_MAX if entry_max is None else int(entry_max)
         self._layouts: "collections.OrderedDict[Tuple, ArenaLayout]" = \
@@ -515,6 +526,9 @@ class ArenaEntry:
         fence.append(list(values))
         while len(fence) > FENCE_DEPTH:
             jax.block_until_ready(fence.pop(0))
+        if _sanitizer._ACTIVE is not None:
+            _sanitizer._ACTIVE.on_add_fence(self, bucket, self._active[bucket],
+                                            len(fence), FENCE_DEPTH)
 
     def _wait_fence(self, bucket: str, buf_idx: int) -> None:
         fence = self._fences[bucket][buf_idx]
@@ -523,6 +537,8 @@ class ArenaEntry:
             jax.block_until_ready([v for grp in fence for v in grp])
             self.fence_wait_s += time.perf_counter() - t0
             fence.clear()
+        if _sanitizer._ACTIVE is not None:
+            _sanitizer._ACTIVE.on_fence_wait(self, bucket, buf_idx)
 
     def take_fence_wait(self) -> float:
         s, self.fence_wait_s = self.fence_wait_s, 0.0
@@ -548,6 +564,11 @@ class ArenaEntry:
             recheck = slot.bucket in self._recheck
             if (trust_identity and not recheck
                     and self._last_leaf[i] is leaf):
+                if _sanitizer._ACTIVE is not None:
+                    # shadow memcmp: catches in-place mutation without
+                    # mark_dirty (DC306), exactly the check this fast
+                    # path elides
+                    _sanitizer._ACTIVE.on_identity_skip(self, slot, leaf)
                 continue
             arr = np.asarray(leaf, dtype=slot.dtype).reshape(-1)
             # the memcmp is the fingerprint: it costs one read pass over the
@@ -572,6 +593,8 @@ class ArenaEntry:
         for b in dirty:
             tgt = 1 - self._active[b]
             self._wait_fence(b, tgt)
+            if _sanitizer._ACTIVE is not None:
+                _sanitizer._ACTIVE.on_staging_write(self, b, tgt)
             buf = self._bufs[b][tgt]
             held = self._buf_slot_vers[b][tgt]
             for lj, si in enumerate(self._bucket_slots[b]):
@@ -584,6 +607,8 @@ class ArenaEntry:
                     buf[slot.offset:slot.offset + slot.size] = arr
                     held[lj] = self._slot_vers[si]
             self._active[b] = tgt
+            if _sanitizer._ACTIVE is not None:
+                _sanitizer._ACTIVE.on_rotate(self, b, tgt)
             self.versions[b] += 1
             self._bump_shards(b, [i for i in pending
                                   if self.layout.slots[i].bucket == b])

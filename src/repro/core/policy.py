@@ -53,6 +53,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 
+from ..analysis import sanitizer as _sanitizer
 from .spec import TransferSpec, UnsupportedSpecError
 from .treepath import TreePath, leaf_paths, _parse as _parse_steps
 
@@ -403,6 +404,9 @@ class ProgramFuture:
         def _sync():
             t0 = time.perf_counter()
             try:
+                san = _sanitizer._ACTIVE
+                if san is not None:
+                    san.on_sync("ProgramFuture")
                 jax.block_until_ready(self._pending)
             except BaseException as e:  # surfaced at result()
                 self._error = e
@@ -455,6 +459,8 @@ class ProgramFuture:
             finish_s = time.perf_counter() - t1
             self._program.last_stats = ProgramStats(
                 self._enqueues, 1, sync_s, self._overlap_s, finish_s)
+            if _sanitizer._ACTIVE is not None:
+                _sanitizer._ACTIVE.on_pass_stats(self._program.last_stats)
             self._result = out
             self._materialized = True
             if self._program._inflight is self:
@@ -573,12 +579,15 @@ class TransferProgram:
         pending_all: List[Any] = []
         finishes: List[Tuple[Region, Any]] = []
         enqueues: Dict[str, int] = {}
-        for key, region in self.regions.items():
-            sub = [leaves[i] for i in region.indices]
-            pending, finish = self._schemes[key].begin_pass(sub)
-            enqueues[key] = len(pending)
-            pending_all.extend(pending)
-            finishes.append((region, finish))
+        # the enqueue half: the sanitizer (when active) flags any blocking
+        # barrier issued inside it (DC304 — the one-sync-per-pass contract)
+        with _sanitizer.enqueue_half():
+            for key, region in self.regions.items():
+                sub = [leaves[i] for i in region.indices]
+                pending, finish = self._schemes[key].begin_pass(sub)
+                enqueues[key] = len(pending)
+                pending_all.extend(pending)
+                finishes.append((region, finish))
         return leaves, pending_all, finishes, enqueues
 
     def _finish(self, leaves: List[Any],
@@ -602,12 +611,16 @@ class TransferProgram:
         contributing zero enqueues here)."""
         leaves, pending_all, finishes, enqueues = self._begin(tree)
         t0 = time.perf_counter()
+        if _sanitizer._ACTIVE is not None:
+            _sanitizer._ACTIVE.on_sync("TransferProgram.to_device")
         jax.block_until_ready(pending_all)
         t1 = time.perf_counter()
         out = self._finish(leaves, finishes)
         t2 = time.perf_counter()
         self.last_stats = ProgramStats(enqueues, 1, t1 - t0,
                                        finish_s=t2 - t1)
+        if _sanitizer._ACTIVE is not None:
+            _sanitizer._ACTIVE.on_pass_stats(self.last_stats)
         return out
 
     def to_device_async(self, tree: Any) -> ProgramFuture:

@@ -32,6 +32,7 @@ import numpy as np
 
 from . import arena as arena_lib
 from . import engine as engine_lib
+from ..analysis import sanitizer as _sanitizer
 from .chainref import ChainRef, declare, extract, insert
 from .spec import TransferSpec, UnsupportedSpecError
 from .treepath import TreePath, leaf_items
@@ -351,6 +352,8 @@ class TransferScheme:
         ys = [jax.device_put(x, self.target) for x in xs]
         t1 = time.perf_counter()
         if sync:
+            if _sanitizer._ACTIVE is not None:
+                _sanitizer._ACTIVE.on_sync(f"{type(self).__name__}._put_batch")
             jax.block_until_ready(ys)
         t2 = time.perf_counter()
         self.ledger.record_wall(t1 - t0, t2 - t1)
@@ -590,6 +593,24 @@ class MarshalScheme(TransferScheme):
         if fence_s:
             self.ledger.record_wall(0.0, fence_s)
 
+    # -- sanitizer hooks (DESIGN.md §13.3) -----------------------------------
+    @staticmethod
+    def _san_enqueued(entry, buffers, names) -> None:
+        """Report each enqueued bucket to the staging sanitizer.  ``buffers``
+        maps bucket -> the exact host array handed to device_put (use an
+        empty map for sharded paths, which enqueue per-shard views)."""
+        san = _sanitizer._ACTIVE
+        if san is not None:
+            for b in names:
+                san.on_enqueue(entry, b, buffers.get(b))
+
+    @staticmethod
+    def _san_drained(entry, names) -> None:
+        san = _sanitizer._ACTIVE
+        if san is not None:
+            for b in names:
+                san.on_drain(entry, b)
+
     # -- double-buffered full transfers (the §7 pipeline, no delta skip) -----
     def _begin_pipelined(self, tree):
         entry = self._entry_for(tree)
@@ -597,8 +618,10 @@ class MarshalScheme(TransferScheme):
         self._record_fence_wait(entry)
         names = list(buffers)
         dev = self._put_batch([buffers[b] for b in names], sync=False)
+        self._san_enqueued(entry, buffers, names)
 
         def finish():
+            self._san_drained(entry, names)
             out_leaves = entry.unpack_leaves_jit(dict(zip(names, dev)))
             out = jax.tree_util.tree_unflatten(entry.layout.treedef,
                                                list(out_leaves))
@@ -641,8 +664,10 @@ class MarshalScheme(TransferScheme):
 
                 return [], finish_memo
         dev = self._put_batch([buffers[b] for b in dirty], sync=False)
+        self._san_enqueued(entry, buffers, dirty)
 
         def finish():
+            self._san_drained(entry, dirty)
             for b, arr in zip(dirty, dev):
                 retained[b] = (entry.versions[b], arr)
             for b in clean:
@@ -742,8 +767,10 @@ class MarshalScheme(TransferScheme):
         self._record_fence_wait(entry)
         plan = self._enqueue_sharded(buffers)
         pending = [s[3] for ss in plan.values() for s in ss]
+        self._san_enqueued(entry, {}, list(buffers))
 
         def finish():
+            self._san_drained(entry, list(buffers))
             dev_bufs = self._assemble_sharded(buffers, plan)
             names = list(buffers)
             out_leaves = entry.unpack_leaves_jit(dev_bufs)
@@ -773,6 +800,8 @@ class MarshalScheme(TransferScheme):
         each bucket into a global array sharded over the whole mesh."""
         plan = self._enqueue_sharded(buffers)
         t0 = time.perf_counter()
+        if _sanitizer._ACTIVE is not None:
+            _sanitizer._ACTIVE.on_sync("MarshalScheme._put_sharded")
         jax.block_until_ready([s[3] for ss in plan.values() for s in ss])
         self.ledger.record_wall(0.0, time.perf_counter() - t0)
         return self._assemble_sharded(buffers, plan)
@@ -822,8 +851,11 @@ class MarshalScheme(TransferScheme):
         new = [(b, s, dev, jax.device_put(buffers[b][lo:hi], dev))
                for b, s, lo, hi, dev in ships]
         self.ledger.record_wall(time.perf_counter() - t0, 0.0)
+        shipped_buckets = sorted({s[0] for s in ships})
+        self._san_enqueued(entry, {}, shipped_buckets)
 
         def finish():
+            self._san_drained(entry, shipped_buckets)
             for (b, s, lo, hi, dev), (_, _, _, arr) in zip(ships, new):
                 retained[b][s] = (entry.shard_versions[b][s], arr)
                 self.ledger.record_h2d((hi - lo) * np.dtype(b).itemsize,

@@ -1,0 +1,38 @@
+"""Fault-injection point names, as importable constants.
+
+A typo'd point string is the worst kind of fault-injection bug: the
+injector validates points at *construction*, but an instrumented call site
+passing an unknown name simply never fires — the test silently probes
+nothing (DESIGN.md §13.2).  Naming points through these constants turns
+that typo into an ``AttributeError`` at import time.
+
+This is deliberately a LEAF module (no imports): :mod:`repro.checkpoint`
+cannot import :mod:`repro.runtime.faults` (``runtime.__init__`` →
+``loop`` → ``checkpoint`` is a cycle), but every layer can import this.
+:mod:`repro.runtime.faults` re-exports everything here, so
+``faults.CKPT_PACK`` and the string CLI surface keep working.
+"""
+
+CKPT_PACK = "ckpt.pack"
+CKPT_WRITE = "ckpt.write"
+CKPT_COMMIT = "ckpt.commit"
+CKPT_GC = "ckpt.gc"
+RESTORE_H2D = "restore.h2d"
+SERVE_PREFILL_PACK = "serve.prefill_pack"
+SERVE_DECODE_STEP = "serve.decode_step"
+SERVE_SLOT_REFILL = "serve.slot_refill"
+SERVE_POLICY_SWAP = "serve.policy_swap"
+
+POINTS = (
+    CKPT_PACK,
+    CKPT_WRITE,
+    CKPT_COMMIT,
+    CKPT_GC,
+    RESTORE_H2D,
+    SERVE_PREFILL_PACK,
+    SERVE_DECODE_STEP,
+    SERVE_SLOT_REFILL,
+    SERVE_POLICY_SWAP,
+)
+
+SERVE_POINTS = tuple(p for p in POINTS if p.startswith("serve."))

@@ -50,19 +50,15 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple, Union
 
-POINTS = (
-    "ckpt.pack",
-    "ckpt.write",
-    "ckpt.commit",
-    "ckpt.gc",
-    "restore.h2d",
-    "serve.prefill_pack",
-    "serve.decode_step",
-    "serve.slot_refill",
-    "serve.policy_swap",
-)
+# point names live in the leaf module repro.faultpoints (the checkpoint
+# layer cannot import runtime); re-exported here so call sites keep writing
+# faults.CKPT_PACK / faults.POINTS and the string CLI surface is unchanged.
+from ..faultpoints import (CKPT_COMMIT, CKPT_GC, CKPT_PACK, CKPT_WRITE,
+                           POINTS, RESTORE_H2D, SERVE_DECODE_STEP,
+                           SERVE_POINTS, SERVE_POLICY_SWAP,
+                           SERVE_PREFILL_PACK, SERVE_SLOT_REFILL)
 
-SERVE_POINTS = tuple(p for p in POINTS if p.startswith("serve."))
+_POINTS = frozenset(POINTS)
 
 
 class InjectedFault(RuntimeError):
@@ -98,6 +94,12 @@ class FaultInjector:
         self.fired: List[Tuple[str, int]] = []
 
     def trip(self, point: str) -> None:
+        # validate at the CALL SITE too: construction-time validation alone
+        # lets a typo'd instrumentation point count arrivals that can never
+        # fire — the fault silently never happens (DESIGN.md §13.2).
+        if point not in _POINTS:
+            raise ValueError(f"unknown injection point {point!r}; "
+                             f"known points: {', '.join(POINTS)}")
         with self._lock:
             self.hits[point] = hit = self.hits.get(point, 0) + 1
             want = self._at.get(point)

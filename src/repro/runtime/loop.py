@@ -191,7 +191,7 @@ def run(train_step: Callable, init_state_fn: Callable[[], Any],
                     t2 = time.perf_counter()
                     prefetch = StatePrefetcher(program)
                     prefetch.schedule(host)
-                    faults_lib.trip("restore.h2d")   # mid-restore kill point
+                    faults_lib.trip(faults_lib.RESTORE_H2D)   # mid-restore kill point
                     host = prefetch.take()
                     # sharded staging is the measured deep copy; compute
                     # wants ONE consistent placement (see replicate_state)
@@ -257,6 +257,7 @@ def run(train_step: Callable, init_state_fn: Callable[[], Any],
                 failure_injector(step)
             batch = data_fn(step)
             state, metrics = train_step(state, batch)
+            # lint: allow=DC201 -- step-boundary compute sync, not a transfer
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             straggler = watchdog.observe(step, dt)

@@ -167,7 +167,7 @@ class Server:
     def _stage_state(self, policy: TransferPolicy):
         """One compiled program pass moving the whole ServeState, then one
         consistent compute placement (see ``replicate_state``)."""
-        faults_lib.trip("serve.policy_swap")
+        faults_lib.trip(faults_lib.SERVE_POLICY_SWAP)
         program = self.session.compile(self._host_state, policy)
         dev = program.to_device(self._host_state)
         dev = replicate_state(dev, policy.num_shards)
@@ -269,7 +269,7 @@ class Server:
                 "lens": np.asarray([len(r.prompt) for r in reqs], np.int32),
                 "slots": np.asarray(slot_ids, np.int32)}
         program = self._pack_program(pack)
-        faults_lib.trip("serve.prefill_pack")
+        faults_lib.trip(faults_lib.SERVE_PREFILL_PACK)
         future = program.to_device_async(pack)
         dev = future.result(timeout=self.transfer_timeout_s)
 
@@ -298,7 +298,7 @@ class Server:
 
     def _refill(self, slot_ids: Sequence[int],
                 reqs: Sequence[Request]) -> List[int]:
-        faults_lib.trip("serve.slot_refill")
+        faults_lib.trip(faults_lib.SERVE_SLOT_REFILL)
         return self._prefill_pack(slot_ids, reqs)
 
     def _fill_slots(self) -> None:
@@ -367,7 +367,7 @@ class Server:
                 tokens[i, 0] = req.tokens_out[-1]
 
         def dispatch():
-            faults_lib.trip("serve.decode_step")
+            faults_lib.trip(faults_lib.SERVE_DECODE_STEP)
             logits, cache = self._decode(self.params, jnp.asarray(tokens),
                                          self.cache)
             return np.asarray(jnp.argmax(logits[:, -1], axis=-1)), cache

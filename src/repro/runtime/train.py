@@ -254,7 +254,8 @@ def replicate_state(state: Any, num_devices: int) -> Any:
 
     mesh = jax.make_mesh((num_devices,), ("data",))
     target = NamedSharding(mesh, PartitionSpec())
-    return jax.tree_util.tree_map(lambda l: jax.device_put(l, target), state)
+    return jax.tree_util.tree_map(  # lint: allow=DC201 -- one-shot init placement
+        lambda l: jax.device_put(l, target), state)
 
 
 def compile_state_program(state: Dict[str, Any], dp_size: int = 1,

@@ -1,0 +1,96 @@
+"""Unit tests for the DC1xx static policy analyzer."""
+import numpy as np
+import pytest
+
+from repro.analysis.check import TAIL_PADDING_WARN, check_policy
+from repro.analysis.diagnostics import Diagnostic, errors, severity_of
+
+
+def _tree():
+    return {"params": {"w": np.zeros(64, np.float32),
+                       "b": np.zeros(8, np.float32)},
+            "opt": {"m": np.zeros(64, np.float32)}}
+
+
+def _codes(diags):
+    return [d.code for d in diags]
+
+
+def test_clean_policy_no_diagnostics():
+    diags = check_policy(_tree(), "params/**=marshal+db; **=marshal",
+                         mesh_size=1, steady_reuse=True)
+    assert diags == []
+
+
+def test_dc101_shadowed_rule():
+    # params/* wins every leaf params/** could claim (two-step paths;
+    # higher specificity), so params/** matches leaves but never wins
+    diags = check_policy(
+        _tree(), "params/*=marshal+db; params/**=marshal+align8; **=marshal",
+        mesh_size=1)
+    assert _codes(diags) == ["DC101"]
+    assert "shadowed" in diags[0].message
+
+
+def test_dc102_zero_leaf_rule():
+    diags = check_policy(
+        _tree(), "embeddings/**=marshal+db; **=marshal", mesh_size=1)
+    assert _codes(diags) == ["DC102"]
+
+
+def test_default_rule_exempt_from_dead_rule_checks():
+    # every leaf has a specific home; the mandatory "**" idles legally
+    diags = check_policy(
+        _tree(), "params/**=marshal+db; opt/**=marshal; **=marshal",
+        mesh_size=1)
+    assert diags == []
+
+
+def test_dc103_shard_tail_padding():
+    # a 3-element bucket on an 8-way mesh pads to 8: 5/8 > TAIL_PADDING_WARN
+    tree = {"tiny": np.zeros(3, np.float32)}
+    diags = check_policy(tree, "**=marshal@dp8", mesh_size=8)
+    assert _codes(diags) == ["DC103"]
+    assert severity_of("DC103") == "warning"
+
+
+def test_dc103_silent_when_padding_small():
+    tree = {"big": np.zeros(4096, np.float32)}
+    assert check_policy(tree, "**=marshal@dp8", mesh_size=8) == []
+    assert 0.0 < TAIL_PADDING_WARN < 1.0
+
+
+def test_dc104_conflicting_device_pins():
+    diags = check_policy(
+        _tree(), "params/**=marshal@dev0; opt/**=marshal@dev1; **=marshal",
+        mesh_size=1)
+    assert _codes(diags) == ["DC104"]
+
+
+def test_dc104_pin_plus_shard_mix():
+    diags = check_policy(
+        _tree(), "params/**=marshal@dp8; opt/**=marshal@dev0; **=marshal",
+        mesh_size=8)
+    assert _codes(diags) == ["DC104"]
+
+
+def test_dc105_delta_without_steady_reuse():
+    diags = check_policy(_tree(), "opt/**=marshal+delta; **=marshal",
+                         mesh_size=1, steady_reuse=False)
+    assert _codes(diags) == ["DC105"]
+    # unknown reuse (None) must not speculate
+    assert check_policy(_tree(), "opt/**=marshal+delta; **=marshal",
+                        mesh_size=1, steady_reuse=None) == []
+
+
+def test_dc106_policy_wider_than_mesh_is_error():
+    diags = check_policy(_tree(), "params/**=marshal@dp8; **=marshal",
+                         mesh_size=2)
+    assert "DC106" in _codes(diags)
+    assert errors(diags)
+    assert all(d.is_error for d in diags if d.code == "DC106")
+
+
+def test_diagnostic_str_carries_where_and_severity():
+    d = Diagnostic("DC106", "boom", where="sc1")
+    assert str(d) == "sc1: DC106 [error] boom"

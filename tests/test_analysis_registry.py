@@ -1,0 +1,44 @@
+"""Registry-wide static analysis gate: every scenario's declared policy
+must be DC1xx-error-free at mesh sizes 1 and 8.
+
+Declared policies are registered with the CURRENT host's device count
+baked in (f-strings over ``jax.device_count()``), so each policy is
+re-derived for the target mesh via ``reshard`` first — exactly the
+elastic-restart move the runtime performs — then analyzed as if that mesh
+were the host.  The multi-device CI job re-runs this file under a real
+forced 8-device host, making the mesh=8 leg non-hypothetical there.
+"""
+import pytest
+
+from repro.analysis.check import check_policy, check_registry
+from repro.scenarios import iter_scenarios
+
+
+def _declared(size="quick"):
+    return [sc for sc in iter_scenarios(size)
+            if sc.declared_policy is not None]
+
+
+def test_registry_declares_policies():
+    assert len(_declared()) >= 2, \
+        "the registry lost its declared-policy scenarios"
+
+
+@pytest.mark.parametrize("mesh", [1, 8])
+def test_declared_policies_clean_at_mesh(mesh):
+    scenarios = _declared()
+    for sc in scenarios:
+        policy = sc.policy().reshard(mesh)
+        steady = bool(sc.params.get("mutate_paths")) \
+            or sc.steady_region_expected is not None
+        diags = check_policy(sc.build(), policy, mesh_size=mesh,
+                             steady_reuse=steady, where=sc.name)
+        bad = [d for d in diags if d.is_error]
+        assert not bad, f"{sc.name} @mesh{mesh}: {[str(d) for d in bad]}"
+
+
+def test_check_registry_runs_end_to_end():
+    results = check_registry("quick", mesh_size=1)
+    assert set(results) == {sc.name for sc in _declared()}
+    for name, diags in results.items():
+        assert not [d for d in diags if d.is_error], (name, diags)

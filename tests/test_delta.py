@@ -95,12 +95,21 @@ def test_in_place_mutation_with_mark_dirty():
 def test_in_place_mutation_without_mark_dirty_is_the_documented_stale():
     """trust_identity skips leaves whose object identity is unchanged —
     the §7 contract says in-place mutators MUST mark_dirty.  Verify the
-    hazard is real (and therefore that mark_dirty is load-bearing)."""
+    hazard is real (and therefore that mark_dirty is load-bearing).
+    Under REPRO_SANITIZE=1 the same hazard is a DC306 at the skipping
+    pass instead of silent staleness — assert whichever contract the
+    session is running under."""
+    from repro.analysis import sanitizer
+
     tree = _tree()
     s = transfer_scheme("marshal+delta")
     s.to_device(tree)
     tree["f32"]["a"][:] = -7.0
     s.ledger.reset()
+    if sanitizer._ACTIVE is not None:
+        with pytest.raises(sanitizer.StagingRaceError, match="DC306"):
+            s.to_device(tree)
+        return
     dev = s.to_device(tree)
     assert s.ledger.h2d_bytes == 0           # fingerprint did not move
     jax.block_until_ready(dev)

@@ -187,3 +187,42 @@ def test_trajectory_diff_reports_mismatches():
     bad = trajectory_diff(ref, off)
     assert len(bad) == 2
     assert "step 1" in bad[0] and "not in the reference" in bad[1]
+
+
+# ---------------------------------------------------------------------------
+# exported point constants + strict call-site validation (DESIGN.md §13.2)
+# ---------------------------------------------------------------------------
+
+def test_point_constants_are_the_points():
+    from repro import faultpoints
+
+    consts = (faultpoints.CKPT_PACK, faultpoints.CKPT_WRITE,
+              faultpoints.CKPT_COMMIT, faultpoints.CKPT_GC,
+              faultpoints.RESTORE_H2D, faultpoints.SERVE_PREFILL_PACK,
+              faultpoints.SERVE_DECODE_STEP, faultpoints.SERVE_SLOT_REFILL,
+              faultpoints.SERVE_POLICY_SWAP)
+    assert set(consts) == set(faults.POINTS)
+    assert len(consts) == len(faults.POINTS)
+    # re-exported through the runtime facade so call sites need one import
+    assert faults.CKPT_PACK == "ckpt.pack"
+    assert faults.SERVE_DECODE_STEP == "serve.decode_step"
+    assert set(faults.SERVE_POINTS) == {p for p in faults.POINTS
+                                        if p.startswith("serve.")}
+
+
+def test_trip_raises_on_unknown_point_at_call_site():
+    """A typo'd instrumentation point used to be silently ignored (the
+    injector only compared against its CONFIGURED points); now it raises
+    at the call site even when the injector never targets it."""
+    inj = faults.FaultInjector("ckpt.write", at=100)
+    with pytest.raises(ValueError, match="unknown injection point"):
+        inj.trip("serve.decode_stepp")
+    # and through the installed module-level fast path too
+    with faults.injected("ckpt.write", at=100):
+        with pytest.raises(ValueError, match="unknown injection point"):
+            faults.trip("ckpt.nope")
+
+
+def test_module_level_trip_still_noop_when_uninstalled():
+    faults.trip("serve.decode_step")        # no injector: pure no-op
+    faults.trip("definitely.not.a.point")   # fast path skips validation

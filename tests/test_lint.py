@@ -1,0 +1,160 @@
+"""Unit tests for the DC2xx AST lint (plus the repo-clean gate)."""
+import textwrap
+
+from repro.analysis.lint import (RAW_CALL_ALLOWLIST, lint_repo, lint_source)
+
+
+def _codes(diags):
+    return [d.code for d in diags]
+
+
+def _lint(src, rel="src/repro/runtime/example.py"):
+    return lint_source(textwrap.dedent(src), rel)
+
+
+# -- DC201: raw transfer/sync calls ------------------------------------------
+
+def test_dc201_raw_device_put_outside_allowlist():
+    diags = _lint("""
+        import jax
+        def f(x):
+            return jax.device_put(x)
+    """)
+    assert _codes(diags) == ["DC201"]
+    assert diags[0].where == "src/repro/runtime/example.py:4"
+
+
+def test_dc201_raw_block_until_ready():
+    assert _codes(_lint("""
+        import jax
+        jax.block_until_ready(x)
+    """)) == ["DC201"]
+
+
+def test_dc201_allowlisted_file_clean():
+    rel = next(iter(RAW_CALL_ALLOWLIST))
+    assert _lint("""
+        import jax
+        jax.device_put(x)
+        jax.block_until_ready(x)
+    """, rel=rel) == []
+
+
+def test_dc201_waiver_same_line_and_line_above():
+    assert _lint("""
+        import jax
+        jax.block_until_ready(x)  # lint: allow=DC201 -- measuring raw sync
+        # lint: allow=DC201 -- warmup
+        jax.block_until_ready(y)
+    """) == []
+
+
+def test_waiver_for_other_code_does_not_suppress():
+    assert _codes(_lint("""
+        import jax
+        jax.block_until_ready(x)  # lint: allow=DC204 -- wrong code
+    """)) == ["DC201"]
+
+
+# -- DC202: fault-point literals ---------------------------------------------
+
+def test_dc202_unknown_trip_literal():
+    diags = _lint("""
+        from repro.runtime import faults
+        faults.trip("serve.decode_stepp")
+    """)
+    assert _codes(diags) == ["DC202"]
+    assert "serve.decode_stepp" in diags[0].message
+
+
+def test_dc202_known_point_and_constants_clean():
+    assert _lint("""
+        from repro.runtime import faults as faults_lib
+        faults_lib.trip("serve.decode_step")
+        faults_lib.trip(faults_lib.SERVE_DECODE_STEP)
+        _trip("ckpt.pack")
+    """) == []
+
+
+def test_dc202_point_keyword():
+    assert _codes(_lint("""
+        run_elastic(step, point="restore.h2dd")
+    """)) == ["DC202"]
+
+
+# -- DC203: spec/policy literals ---------------------------------------------
+
+def test_dc203_bad_spec_literal():
+    diags = _lint("""
+        from repro.core.spec import TransferSpec
+        TransferSpec.parse("marshal+dbb")
+    """)
+    assert _codes(diags) == ["DC203"]
+
+
+def test_dc203_bad_policy_literal_and_declared_policy_kwarg():
+    diags = _lint("""
+        from repro.core.policy import TransferPolicy
+        TransferPolicy.parse("params/**=nosuchkind; **=marshal")
+        Scenario(declared_policy="params/**=marshal")  # missing ** default
+    """)
+    assert _codes(diags) == ["DC203", "DC203"]
+
+
+def test_dc203_good_literals_and_fstrings_clean():
+    assert _lint("""
+        from repro.core.policy import TransferPolicy
+        from repro.core.spec import TransferSpec
+        TransferSpec.parse("marshal+delta@dp8")
+        TransferPolicy.parse("params/**=marshal+db; **=pointerchain")
+        TransferPolicy.of("uvm")
+        TransferPolicy.parse(f"**=marshal@dp{k}")
+    """) == []
+
+
+# -- DC204: arena writes without mark_dirty ----------------------------------
+
+def test_dc204_staging_write_without_mark_dirty():
+    diags = _lint("""
+        def poke(entry):
+            entry.staging["float32"][0] = 1.0
+    """)
+    assert _codes(diags) == ["DC204"]
+
+
+def test_dc204_augassign_and_shard_views():
+    assert _codes(_lint("""
+        def poke(entry, views):
+            entry.shard_views()["float32"][0][:] += 1.0
+    """)) == ["DC204"]
+
+
+def test_dc204_clean_with_mark_dirty_in_scope():
+    assert _lint("""
+        def poke(entry):
+            entry.staging["float32"][0] = 1.0
+            entry.mark_dirty("float32")
+        def poke2(entry):
+            entry.staging["float32"][0] = 1.0
+            entry.bump_version()
+    """) == []
+
+
+def test_dc204_ordinary_subscript_writes_clean():
+    assert _lint("""
+        def f(d):
+            d["k"] = 1
+            d["k"][0] += 2
+    """) == []
+
+
+# -- repo gate ----------------------------------------------------------------
+
+def test_repo_is_lint_clean():
+    diags = lint_repo()
+    assert diags == [], [str(d) for d in diags]
+
+
+def test_syntax_error_reported_as_dc203():
+    diags = lint_source("def broken(:\n", "src/repro/x.py")
+    assert _codes(diags) == ["DC203"]

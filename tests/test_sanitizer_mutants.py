@@ -1,0 +1,255 @@
+"""Seeded-bug ("mutant") validation of the staging race sanitizer.
+
+Each mutant re-introduces one historical class of arena bug — skipped
+fence waits, stale-buffer enqueues, fence leaks, double syncs, mid-flight
+staging mutation, forgotten ``mark_dirty`` — and must be caught by its
+SPECIFIC DC3xx code, while the equivalent clean drive stays silent.  This
+is the sanitizer's own test oracle: a checker that flags nothing on clean
+runs and the right thing on each seeded bug.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import sanitizer
+from repro.analysis.sanitizer import StagingRaceError, SyncDisciplineError
+from repro.core import arena as arena_lib
+from repro.core import engine as engine_lib
+from repro.core.engine import ArenaEntry, TransferSession
+from repro.core.schemes import MarshalScheme
+from repro.core.spec import TransferSpec
+
+
+@pytest.fixture
+def san():
+    """A fresh shadow machine, restoring whatever was active before (so a
+    suite-wide REPRO_SANITIZE=1 run is not silently disabled mid-suite)."""
+    prev = sanitizer._ACTIVE
+    machine = sanitizer.enable(fresh=True)
+    yield machine
+    sanitizer._ACTIVE = prev
+
+
+def _tree(seed: int = 0, n: int = 32):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal(n).astype(np.float32),
+            "b": rng.standard_normal(n // 4).astype(np.float32)}
+
+
+# ---------------------------------------------------------------------------
+# mutant entries / schemes
+# ---------------------------------------------------------------------------
+
+class SkipFenceWaitEntry(ArenaEntry):
+    """Seeded bug: rewrites staging without waiting the buffer's fence."""
+
+    def _wait_fence(self, bucket: str, buf_idx: int) -> None:
+        pass  # the bug: no jax wait, no clear, no on_fence_wait
+
+
+class LeakyFenceEntry(ArenaEntry):
+    """Seeded bug: registers fences without the FENCE_DEPTH trim."""
+
+    def add_fence(self, bucket: str, values) -> None:
+        fence = self._fences[bucket][self._active[bucket]]
+        fence.append(list(values))   # the bug: no trim loop
+        if sanitizer._ACTIVE is not None:
+            sanitizer._ACTIVE.on_add_fence(
+                self, bucket, self._active[bucket], len(fence),
+                engine_lib.FENCE_DEPTH)
+
+
+class DoubleSyncScheme(MarshalScheme):
+    """Seeded bug: synchronizes inside the enqueue half (per-region
+    barrier), breaking the program's one-sync-per-pass contract."""
+
+    def _begin_pipelined(self, tree):
+        entry = self._entry_for(tree)
+        buffers = entry.pack_host(tree)
+        names = list(buffers)
+        dev = self._put_batch([buffers[b] for b in names], sync=True)  # bug
+
+        def finish():
+            return entry.unpack(dict(zip(names, dev)))
+
+        return list(dev), finish
+
+
+class ReuseDrainedBufferScheme(MarshalScheme):
+    """Seeded bug: enqueues the bucket's INACTIVE (previously drained)
+    buffer instead of the active one carrying the newest bytes."""
+
+    def _begin_pipelined(self, tree):
+        entry = self._entry_for(tree)
+        entry.pack_host(tree)
+        names = list(entry.staging)
+        stale = {b: entry._bufs[b][1 - entry._active[b]] for b in names}
+        dev = self._put_batch([stale[b] for b in names], sync=False)
+        self._san_enqueued(entry, stale, names)   # reports the actual arrays
+
+        def finish():
+            self._san_drained(entry, names)
+            return entry.unpack(dict(zip(names, dev)))
+
+        return list(dev), finish
+
+
+# ---------------------------------------------------------------------------
+# the six mutants, each with its specific code
+# ---------------------------------------------------------------------------
+
+def _drive_fenced_packs(entry: ArenaEntry) -> None:
+    """Three packs of changing data, fencing the active buffer after each
+    — the pipelined executor's steady-state rhythm.  By pack 3 rotation
+    returns to a buffer whose fence only a real ``_wait_fence`` cleared."""
+    for seed in range(3):
+        buffers = entry.pack_host(_tree(seed=seed))
+        for b, buf in buffers.items():
+            entry.add_fence(b, [jnp.zeros(1)])
+
+
+def test_mutant_skip_fence_wait_raises_dc301(san):
+    entry = SkipFenceWaitEntry(arena_lib.plan(_tree()))
+    with pytest.raises(StagingRaceError) as ei:
+        _drive_fenced_packs(entry)
+    assert ei.value.code == "DC301"
+
+
+def test_clean_fenced_packs_silent(san):
+    _drive_fenced_packs(ArenaEntry(arena_lib.plan(_tree())))
+    assert san.events["fence_wait"] >= 2
+
+
+def test_mutant_reuse_drained_buffer_raises_dc302(san):
+    scheme = ReuseDrainedBufferScheme(TransferSpec.parse("marshal+db"),
+                                      TransferSession())
+    with pytest.raises(StagingRaceError) as ei:
+        scheme.begin_pass(_tree())
+    assert ei.value.code == "DC302"
+
+
+def test_mutant_leaky_fence_raises_dc303(san):
+    entry = LeakyFenceEntry(arena_lib.plan(_tree()))
+    entry.pack_host(_tree())
+    with pytest.raises(StagingRaceError) as ei:
+        for _ in range(engine_lib.FENCE_DEPTH + 1):
+            entry.add_fence("float32", [jnp.zeros(1)])
+    assert ei.value.code == "DC303"
+
+
+def test_clean_fence_depth_trim_silent(san):
+    entry = ArenaEntry(arena_lib.plan(_tree()))
+    entry.pack_host(_tree())
+    for _ in range(engine_lib.FENCE_DEPTH + 3):
+        entry.add_fence("float32", [jnp.zeros(1)])  # trim keeps depth legal
+    assert san.events["add_fence"] == engine_lib.FENCE_DEPTH + 3
+
+
+def test_mutant_double_sync_raises_dc304(san):
+    session = TransferSession()
+    tree = _tree()
+    program = session.compile(tree, "**=marshal+db")
+    key = next(iter(program._schemes))
+    program._schemes[key] = DoubleSyncScheme(TransferSpec.parse("marshal+db"),
+                                             session)
+    with pytest.raises(SyncDisciplineError) as ei:
+        program.to_device(tree)
+    assert ei.value.code == "DC304"
+
+
+def test_mutant_pass_stats_double_sync_raises_dc304(san):
+    from repro.core.policy import ProgramStats
+
+    with pytest.raises(SyncDisciplineError) as ei:
+        san.on_pass_stats(ProgramStats({"**": 1}, 2, 0.0))
+    assert ei.value.code == "DC304"
+
+
+def test_mutant_mutate_staging_mid_flight_raises_dc305(san):
+    scheme = MarshalScheme(TransferSpec.parse("marshal+db"),
+                           TransferSession())
+    tree = _tree()
+    _, finish = scheme.begin_pass(tree)
+    # the bug: a host writer scribbles on staging while the DMA is in
+    # flight (before the pass's barrier + finish drained it)
+    scheme._entry.staging["float32"][0] += 1.0  # lint: allow=DC204 -- seeded bug
+    with pytest.raises(StagingRaceError) as ei:
+        finish()
+    assert ei.value.code == "DC305"
+
+
+def test_clean_begin_finish_silent(san):
+    scheme = MarshalScheme(TransferSpec.parse("marshal+db"),
+                           TransferSession())
+    tree = _tree()
+    pending, finish = scheme.begin_pass(tree)
+    jax.block_until_ready(pending)
+    finish()
+    assert san.events["drain"] >= 1
+
+
+def test_mutant_forgot_mark_dirty_raises_dc306(san):
+    scheme = MarshalScheme(TransferSpec.parse("marshal+delta"),
+                           TransferSession())
+    tree = _tree()
+    scheme.to_device(tree)
+    scheme.to_device(tree)           # identity-trusted clean repeat: fine
+    tree["w"][0] += 42.0             # in-place mutation, mark_dirty forgot
+    with pytest.raises(StagingRaceError) as ei:
+        scheme.to_device(tree)
+    assert ei.value.code == "DC306"
+
+
+def test_clean_mark_dirty_after_inplace_mutation_silent(san):
+    scheme = MarshalScheme(TransferSpec.parse("marshal+delta"),
+                           TransferSession())
+    tree = _tree()
+    scheme.to_device(tree)
+    scheme.to_device(tree)
+    tree["w"][0] += 42.0
+    scheme.mark_dirty(tree)          # the fix the mutant above forgot
+    dev = scheme.to_device(tree)
+    np.testing.assert_allclose(np.asarray(dev["w"])[0], tree["w"][0])
+
+
+# ---------------------------------------------------------------------------
+# suite-level properties
+# ---------------------------------------------------------------------------
+
+def test_mutants_cover_six_distinct_codes():
+    """The six seeded bugs map onto six DISTINCT DC3xx codes — no two
+    mutants collapse onto the same diagnosis."""
+    import ast
+    import pathlib
+
+    src = pathlib.Path(__file__).read_text()
+    import re
+
+    codes = {node.value for node in ast.walk(ast.parse(src))
+             if isinstance(node, ast.Constant)
+             and isinstance(node.value, str)
+             and re.fullmatch(r"DC3\d\d", node.value)}
+    assert codes == {"DC301", "DC302", "DC303", "DC304", "DC305", "DC306"}
+
+
+def test_clean_program_all_paths_silent(san):
+    """A full clean program drive — blocking, async, delta steady state —
+    trips no diagnostic while exercising every hook."""
+    session = TransferSession()
+    # opt is structurally distinct from params on purpose: treedef-equal
+    # regions share one ArenaEntry, whose identity tracking then follows
+    # the LAST packer — distinct layouts give each region its own arena.
+    tree = {"params": _tree(seed=1),
+            "opt": {"m": np.arange(16, dtype=np.float32)}}
+    program = session.compile(
+        tree, "params/**=marshal+db; opt/**=marshal+delta; **=marshal+db")
+    program.to_device(tree)
+    tree["params"]["w"] = tree["params"]["w"] + 1.0
+    program.to_device(tree)
+    fut = program.to_device_async(tree)
+    fut.result()
+    for event in ("staging_write", "rotate", "enqueue", "sync", "drain",
+                  "add_fence", "pass"):
+        assert san.events.get(event, 0) >= 1, event
+    assert san.events.get("identity_skip", 0) >= 1
