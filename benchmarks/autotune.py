@@ -1,0 +1,240 @@
+"""Cost-guided transfer-policy autotuner: search, prune statically, measure.
+
+The policy space (scheme x delta x sharding x staging, per region) is too
+large to hand-pick and too expensive to measure exhaustively.  This tool
+closes the loop the ROADMAP asked for, in three stages per scenario:
+
+  1. **Enumerate** the bounded candidate grid over the scenario's declared
+     region structure (``repro.core.policy.enumerate_policies``:
+     ``candidate_specs(mesh)`` per rule — 5^regions policies on a mesh,
+     3^regions on one device).
+  2. **Prune statically** with the cost model (``repro.analysis.cost``):
+     rank every candidate by the calibrated wall estimate of one cold pass
+     amortized over STEADY_WEIGHT steady passes; only the top-k survive.
+     Zero device execution so far.
+  3. **Measure** the survivors (plus the declared policy, always) with
+     real ``TransferProgram`` runs through the differential harness
+     (``run_policy_scenario``: every pass value- and motion-checked), and
+     pick the measured winner.
+
+Because the declared policy is always in the measured set, the winner is
+measured <= declared by construction — asserted in ``--smoke``.  And
+because the cost model's Motion half is a theorem, not an estimate, this
+tool asserts static predicted bytes/calls == the measured ledger EXACTLY,
+per region, cold and steady, for every program it runs — the
+static/measured differential of DESIGN.md §14.
+
+Writes one ``declared_vs_tuned`` row per scenario (schema v8, scheme
+"autotune") to ``BENCH_autotune.json``; the calibrated device model
+persists to ``BENCH_costmodel.json``.
+
+    PYTHONPATH=src python -m benchmarks.autotune            # quick registry
+    PYTHONPATH=src python -m benchmarks.autotune --smoke    # 2-scenario CI leg
+    PYTHONPATH=src python -m benchmarks.autotune --calibrate  # refit model
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+SMOKE_FAMILIES = ("steady_reuse", "mixed_policy")
+
+
+def _repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _assert_prediction_exact(name: str, policy: str, pc: Any,
+                             cold: Any, warm: Optional[Any]) -> None:
+    """The theorem half: cost-model predicted Motion == measured ledger,
+    exactly, totals and per region, cold and steady."""
+    assert (pc.cold_bytes, pc.cold_calls) == (cold.h2d_bytes, cold.h2d_calls), (
+        f"{name} [{policy}]: predicted cold ({pc.cold_bytes} B, "
+        f"{pc.cold_calls} DMAs) != measured ({cold.h2d_bytes} B, "
+        f"{cold.h2d_calls} DMAs)")
+    for rc in pc.regions:
+        led = cold.regions[rc.key]
+        got = (led["h2d_bytes"], led["h2d_calls"])
+        assert got == rc.cold.as_tuple(), (
+            f"{name} [{policy}] region {rc.key!r}: predicted cold "
+            f"{rc.cold.as_tuple()} != measured {got}")
+    if warm is None:
+        return
+    assert (pc.steady_bytes, pc.steady_calls) == (warm.h2d_bytes,
+                                                  warm.h2d_calls), (
+        f"{name} [{policy}]: predicted steady ({pc.steady_bytes} B, "
+        f"{pc.steady_calls} DMAs) != measured ({warm.h2d_bytes} B, "
+        f"{warm.h2d_calls} DMAs)")
+    for rc in pc.regions:
+        led = warm.regions[rc.key]
+        got = (led["h2d_bytes"], led["h2d_calls"])
+        assert got == rc.steady.as_tuple(), (
+            f"{name} [{policy}] region {rc.key!r}: predicted steady "
+            f"{rc.steady.as_tuple()} != measured {got}")
+
+
+def tune_scenario(sc: Any, model: Any, *, top_k: int = 4, passes: int = 3,
+                  steady_weight: Optional[int] = None) -> Dict[str, Any]:
+    """Search/prune/measure one scenario; returns its declared_vs_tuned
+    row (schema v8).  Raises AssertionError on any value, motion or
+    static/measured mismatch — the harness treats those as CI failures,
+    never as data."""
+    import jax
+
+    from repro.analysis.cost import STEADY_WEIGHT, policy_cost
+    from repro.core import TransferPolicy, enumerate_policies
+    from repro.scenarios.driver import run_policy_scenario
+
+    from .bench_schema import upgrade_row
+
+    w = STEADY_WEIGHT if steady_weight is None else steady_weight
+    tree = sc.build()
+    mutate = list(sc.steady_mutate_paths())
+    declared = sc.policy() or TransferPolicy.of("marshal")
+    patterns = tuple(r.pattern for r in declared.rules)
+    mesh = jax.device_count()
+
+    # 1. enumerate the bounded grid over the declared region structure
+    candidates = enumerate_policies(patterns, mesh_size=mesh)
+    if declared not in candidates:
+        candidates.append(declared)
+
+    # 2. static prune: rank by the calibrated wall objective (no devices)
+    costs = {p: policy_cost(tree, p, mutate) for p in candidates}
+    ranked = sorted(candidates,
+                    key=lambda p: (model.objective_us(costs[p], w), str(p)))
+    survivors = ranked[:max(1, top_k)]
+    if declared not in survivors:
+        survivors.append(declared)
+
+    # 3. measure the survivors; assert the motion theorem on every run
+    measured: Dict[Any, Dict[str, float]] = {}
+    for pol in survivors:
+        ms = run_policy_scenario(sc, pol, tree=tree, passes=1 + max(1, passes))
+        bad = [i for i, m in enumerate(ms) if not (m.ok and m.motion_ok)]
+        assert not bad, (f"{sc.name} [{pol}]: value/motion check failed on "
+                         f"pass(es) {bad}")
+        cold, warm = ms[0], ms[1:]
+        _assert_prediction_exact(sc.name, str(pol), costs[pol], cold, warm[0])
+        steady_wall = min(m.wall_us for m in warm)
+        measured[pol] = {
+            "cold_wall_us": cold.wall_us,
+            "steady_wall_us": steady_wall,
+            "objective_us": cold.wall_us + w * steady_wall,
+        }
+
+    winner = min(measured, key=lambda p: (measured[p]["objective_us"],
+                                          str(p)))
+    pc = costs[winner]
+    row = upgrade_row({
+        "scenario": sc.name, "family": sc.family, "scheme": "autotune",
+        "policy": str(declared), "tuned_policy": str(winner),
+        "n_devices": mesh, "sharded": pc.policy.num_shards > 1,
+        "declared_steady_wall_us": round(
+            measured[declared]["steady_wall_us"], 2),
+        "tuned_steady_wall_us": round(measured[winner]["steady_wall_us"], 2),
+        "steady_wall_us": round(measured[winner]["steady_wall_us"], 2),
+        "cached_wall_us": round(measured[winner]["cold_wall_us"], 2),
+        "predicted_cold_wall_us": round(model.cold_wall_us(pc), 2),
+        "predicted_steady_wall_us": round(model.steady_wall_us(pc), 2),
+        "predicted_cold_bytes": pc.cold_bytes,
+        "predicted_steady_bytes": pc.steady_bytes,
+        "h2d_bytes": pc.cold_bytes, "h2d_calls": pc.cold_calls,
+        "candidates": len(candidates), "measured": len(measured),
+    })
+    return row
+
+
+def _load_model(path: str, calibrate: bool) -> Any:
+    from repro.analysis.cost import CostModel
+
+    if not calibrate and os.path.exists(path):
+        return CostModel.load(path)
+    model = CostModel.calibrate()
+    model.save(path)
+    print(f"calibrated device model -> {path}: latency {model.latency_us} "
+          f"us/DMA, bandwidth {model.bandwidth_gbps} GB/s")
+    return model
+
+
+def run(size: str = "quick", only: Optional[Tuple[str, ...]] = None, *,
+        top_k: int = 4, passes: int = 3, json_path: Optional[str] = None,
+        calibrate: bool = False, smoke: bool = False) -> List[Dict[str, Any]]:
+    from repro.scenarios import iter_scenarios
+
+    model_path = os.path.join(_repo_root(), "BENCH_costmodel.json")
+    model = _load_model(model_path, calibrate)
+    scenarios = iter_scenarios(size, only=only)
+    rows: List[Dict[str, Any]] = []
+    print(f"{'scenario':<28} {'declared':<14} {'tuned':<14} "
+          f"{'decl us':>9} {'tuned us':>9} {'pred us':>9}")
+    for sc in scenarios:
+        row = tune_scenario(sc, model, top_k=top_k, passes=passes)
+        rows.append(row)
+        decl_disp = row["policy"] if len(row["policy"]) <= 14 \
+            else row["policy"][:11] + "..."
+        tuned_disp = row["tuned_policy"] if len(row["tuned_policy"]) <= 14 \
+            else row["tuned_policy"][:11] + "..."
+        print(f"{row['scenario']:<28} {decl_disp:<14} {tuned_disp:<14} "
+              f"{row['declared_steady_wall_us']:>9.1f} "
+              f"{row['tuned_steady_wall_us']:>9.1f} "
+              f"{row['predicted_steady_wall_us']:>9.1f}")
+        if smoke:
+            assert row["tuned_steady_wall_us"] \
+                <= row["declared_steady_wall_us"] + 1e-9, (
+                f"{row['scenario']}: tuned policy measured slower than "
+                f"declared — the argmin invariant broke")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
+            f.write("\n")
+        print(f"wrote {len(rows)} declared_vs_tuned rows -> {json_path}")
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.autotune",
+        description="cost-guided policy autotuner: enumerate candidates, "
+                    "prune with the static cost model, measure the top-k, "
+                    "report declared vs tuned")
+    ap.add_argument("--size", default="quick",
+                    choices=("smoke", "quick", "full"))
+    ap.add_argument("--only", default="",
+                    help="comma-separated scenario families to tune")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI leg: smoke sizes, two small families "
+                         f"({', '.join(SMOKE_FAMILIES)}), and assert the "
+                         "tuned policy measured <= the declared one")
+    ap.add_argument("--top-k", type=int, default=4,
+                    help="statically ranked candidates to measure "
+                         "(the declared policy is always measured too)")
+    ap.add_argument("--passes", type=int, default=3,
+                    help="steady passes per measured candidate")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="refit the device model from live probe transfers "
+                         "even if BENCH_costmodel.json exists")
+    ap.add_argument("--json", default=None,
+                    help="output row file (default BENCH_autotune.json at "
+                         "the repo root; 'none' disables)")
+    args = ap.parse_args(argv)
+
+    size = "smoke" if args.smoke else args.size
+    only = tuple(filter(None, args.only.split(","))) or None
+    if args.smoke and only is None:
+        only = SMOKE_FAMILIES
+    json_path = args.json
+    if json_path is None:
+        json_path = os.path.join(_repo_root(), "BENCH_autotune.json")
+    elif json_path == "none":
+        json_path = None
+    run(size, only, top_k=args.top_k, passes=args.passes,
+        json_path=json_path, calibrate=args.calibrate, smoke=args.smoke)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,15 +41,29 @@ current-schema rows.
                   (degradation-ladder rungs taken).  Serve rows set
                   steady_wall_us to the p99 latency in µs so the existing
                   --gate regression check covers them unchanged.
+  v8              + autotune rows (scheme="autotune", one per tuned
+                  scenario — benchmarks.autotune): tuned_policy (the
+                  measured winner; the row's "policy" column carries the
+                  DECLARED policy so the trajectory key stays stable),
+                  declared_steady_wall_us / tuned_steady_wall_us (measured),
+                  predicted_steady_wall_us / predicted_cold_wall_us (the
+                  calibrated cost model's estimate for the winner),
+                  predicted_cold_bytes / predicted_steady_bytes (the exact
+                  Motion half — asserted == the measured ledger),
+                  candidates / measured (search width: grid size, programs
+                  actually run)
 
 The ledger-derived column defaults come from ``TransferLedger().as_dict()``
 rather than a hand-maintained list, so a ledger field added upstream
 becomes a schema column (with its zero default) in one place.
 
-Run ``python -m benchmarks.bench_schema --gate old.json new.json`` to use
-:func:`compare` as a CI regression gate: it joins the freshly emitted rows
+Run ``python -m benchmarks.bench_schema old.json new.json --gate`` to use
+:func:`gate` as a CI regression gate: it joins the freshly emitted rows
 against the committed baseline and FAILS (exit 1) on any steady-wall
-regression beyond the threshold (default 1.5x).
+regression beyond the threshold (default 1.5x).  ``--baseline`` is the
+richer CI mode: the same gate PLUS a full per-row steady-wall diff report
+(old → new, ratio, added/retired rows), so the build log shows the whole
+trajectory, not just the failures.
 """
 from __future__ import annotations
 
@@ -58,7 +72,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import TransferLedger
 
-SCHEMA_VERSION = 7
+SCHEMA_VERSION = 8
 
 # the ledger fields that are persisted per row, with the ledger's own
 # zero-state as their defaults (timings are reported as *_us columns
@@ -126,6 +140,18 @@ V7_DEFAULTS: Dict[str, Any] = {
     "policy_fallbacks": None,    # degradation-ladder rungs taken
 }
 
+V8_DEFAULTS: Dict[str, Any] = {
+    "tuned_policy": None,             # autotune rows: the measured winner
+    "declared_steady_wall_us": None,  # measured, declared policy
+    "tuned_steady_wall_us": None,     # measured, tuned winner
+    "predicted_steady_wall_us": None,  # cost model estimate for the winner
+    "predicted_cold_wall_us": None,
+    "predicted_cold_bytes": None,     # exact Motion half (== ledger)
+    "predicted_steady_bytes": None,
+    "candidates": None,               # bounded grid size for the scenario
+    "measured": None,                 # programs actually run (post-prune)
+}
+
 
 def upgrade_row(row: Dict[str, Any]) -> Dict[str, Any]:
     """Lift a row of ANY past schema to SCHEMA_VERSION (old rows parse)."""
@@ -135,7 +161,7 @@ def upgrade_row(row: Dict[str, Any]) -> Dict[str, Any]:
                          f"({SCHEMA_VERSION}); update benchmarks/bench_schema.py")
     out = dict(row)
     for defaults in (V2_DEFAULTS, V3_DEFAULTS, V4_DEFAULTS, V5_DEFAULTS,
-                     V6_DEFAULTS, V7_DEFAULTS):
+                     V6_DEFAULTS, V7_DEFAULTS, V8_DEFAULTS):
         for key, default in defaults.items():
             out.setdefault(key, dict(default) if isinstance(default, dict)
                            else default)
@@ -206,21 +232,90 @@ def gate(old_rows: List[Dict[str, Any]], new_rows: List[Dict[str, Any]],
     return failures
 
 
+def baseline_diff(old_rows: List[Dict[str, Any]],
+                  new_rows: List[Dict[str, Any]]
+                  ) -> List[Dict[str, Any]]:
+    """The full per-row steady-wall trajectory for the --baseline report:
+    one cell per row key with the gate's own column choice (steady wall
+    where both sides have it, else cached wall), plus ``status`` —
+    ``both`` / ``added`` / ``retired``."""
+    old = {row_key(r): upgrade_row(r) for r in old_rows}
+    new = {row_key(r): upgrade_row(r) for r in new_rows}
+    out: List[Dict[str, Any]] = []
+    for key in sorted({*old, *new}):
+        a, b = old.get(key), new.get(key)
+        column, va, vb = "steady_wall_us", None, None
+        for column in ("steady_wall_us", "cached_wall_us"):
+            va = a.get(column) if a else None
+            vb = b.get(column) if b else None
+            if (va or not a) and (vb or not b):
+                break
+        status = "both" if a and b else ("added" if b else "retired")
+        ratio = round(vb / va, 2) if va and vb else None
+        out.append({"scenario": key[0], "scheme": key[1], "policy": key[2],
+                    "column": column, "old_us": va, "new_us": vb,
+                    "ratio": ratio, "status": status})
+    return out
+
+
+def run_baseline(old_path: str, new_path: str,
+                 threshold: float = 1.5) -> int:
+    """The CI --baseline verdict: print the full steady-wall diff of the
+    fresh rows against the committed baseline, then apply :func:`gate`.
+    Returns a process exit code — 0 clean, 1 on any regression beyond
+    ``threshold`` — shared by the bench_schema CLI and
+    ``benchmarks.run --baseline``."""
+    old_rows, new_rows = load_rows(old_path), load_rows(new_path)
+    cells = baseline_diff(old_rows, new_rows)
+    print(f"baseline diff: {old_path} -> {new_path} "
+          f"({len(old_rows)} -> {len(new_rows)} rows)")
+    for c in cells:
+        name = "/".join(p for p in (c["scenario"], c["scheme"],
+                                    c["policy"]) if p)
+        if c["status"] != "both":
+            print(f"  {name}: {c['status']}")
+            continue
+        old_us = f"{c['old_us']:.1f}" if c["old_us"] else "-"
+        new_us = f"{c['new_us']:.1f}" if c["new_us"] else "-"
+        ratio = f" ({c['ratio']}x)" if c["ratio"] else ""
+        print(f"  {name}: {c['column']} {old_us} -> {new_us} us{ratio}")
+    failures = gate(old_rows, new_rows, threshold=threshold)
+    if failures:
+        print(f"BASELINE GATE FAILED: {len(failures)} row(s) regressed "
+              f">{threshold}x")
+        for f in failures:
+            name = "/".join(p for p in
+                            (f["scenario"], f["scheme"], f["policy"]) if p)
+            print(f"  {name}: {f['column']} {f['old_us']:.1f} -> "
+                  f"{f['new_us']:.1f} us ({f['ratio']}x)")
+        return 1
+    print(f"baseline gate passed (threshold {threshold}x, "
+          f"{len(new_rows)} fresh rows)")
+    return 0
+
+
 def _main(argv: Optional[List[str]] = None) -> int:
     import argparse
 
     ap = argparse.ArgumentParser(
         description="diff two BENCH_transfer.json row sets; --gate fails "
-                    "the build on steady-wall regression")
+                    "the build on steady-wall regression, --baseline adds "
+                    "the full per-row trajectory report to the same gate")
     ap.add_argument("old", help="baseline rows (committed BENCH_transfer.json)")
     ap.add_argument("new", help="freshly emitted rows")
     ap.add_argument("--gate", action="store_true",
                     help="exit 1 if any row regressed past --threshold")
+    ap.add_argument("--baseline", action="store_true",
+                    help="CI mode: print the full steady-wall diff against "
+                         "the committed baseline AND apply the gate "
+                         "(exit 1 on regression past --threshold)")
     ap.add_argument("--threshold", type=float, default=1.5,
                     help="regression ratio that fails the gate (default 1.5)")
     ap.add_argument("--column", default="cached_wall_us",
                     help="column for the plain (non-gate) diff report")
     args = ap.parse_args(argv)
+    if args.baseline:
+        return run_baseline(args.old, args.new, threshold=args.threshold)
     old_rows, new_rows = load_rows(args.old), load_rows(args.new)
     if args.gate:
         failures = gate(old_rows, new_rows, threshold=args.threshold)

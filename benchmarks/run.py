@@ -74,6 +74,11 @@ def main(argv=None) -> None:
                          "pipelined executor too (async==sync enforced)")
     ap.add_argument("--skip", default="",
                     help="comma-separated section names to skip")
+    ap.add_argument("--baseline", default="",
+                    help="committed BENCH_transfer.json to diff the fresh "
+                         "rows against after the transfer+elastic sections "
+                         "(bench_schema --baseline; exits 1 on steady-wall "
+                         "regression)")
     args = ap.parse_args(argv)
     skip = set(filter(None, args.skip.split(",")))
     specs = list(filter(None, args.spec.split(","))) or None
@@ -139,6 +144,18 @@ def main(argv=None) -> None:
         # runs AFTER the transfer section on purpose: transfer_steady owns
         # and rewrites BENCH_transfer.json; elastic rows merge into it
         elastic_restart.run_bench(quick=args.quick, json_path=json_path)
+
+    if args.baseline:
+        # after the transfer+elastic sections have rewritten the fresh row
+        # file: diff it against the committed baseline and fail loudly on a
+        # steady-wall regression (bench_schema --baseline semantics)
+        _section(f"baseline diff (vs {args.baseline})")
+        from . import bench_schema
+        fresh = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_transfer.json")
+        rc = bench_schema.run_baseline(args.baseline, fresh)
+        if rc:
+            sys.exit(rc)
 
     if "serve" not in skip:
         _section("serve load (open-loop request stream, faulted legs)")

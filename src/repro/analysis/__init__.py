@@ -17,23 +17,34 @@ Three checking layers over one diagnostic-code taxonomy
                         unknown fault-point literals, unparseable
                         spec/policy literals, in-place arena writes without
                         ``mark_dirty`` (``python -m repro.analysis.lint``).
+  * :mod:`.cost`      — static transfer cost model (DESIGN.md §14): exact
+                        per-region cold/steady Motion + footprint
+                        predictions (:func:`~repro.analysis.cost.policy_cost`),
+                        the calibrated wall estimator
+                        (:class:`~repro.analysis.cost.CostModel`), and the
+                        DC11x advisory diagnostics ``check`` surfaces.
 
-``check`` and ``lint`` import the core; they are loaded lazily here so the
-core engine can import :mod:`.sanitizer` (stdlib + numpy only) without a
-cycle.
+``check``, ``lint`` and ``cost`` import the core; they are loaded lazily
+here so the core engine can import :mod:`.sanitizer` (stdlib + numpy only)
+without a cycle.
 """
 from . import diagnostics, sanitizer
 from .diagnostics import Diagnostic, errors
 from .sanitizer import StagingRaceError, SyncDisciplineError
 
-__all__ = ["Diagnostic", "StagingRaceError", "SyncDisciplineError",
-           "check", "check_policy", "check_registry", "diagnostics",
-           "errors", "lint", "lint_paths", "lint_repo", "sanitizer"]
+__all__ = ["CostModel", "Diagnostic", "StagingRaceError",
+           "SyncDisciplineError", "check", "check_policy", "check_registry",
+           "cost", "cost_diagnostics", "diagnostics", "errors", "lint",
+           "lint_paths", "lint_repo", "policy_cost", "sanitizer"]
 
 _LAZY = {
     "check": ("repro.analysis.check", None),
     "check_policy": ("repro.analysis.check", "check_policy"),
     "check_registry": ("repro.analysis.check", "check_registry"),
+    "cost": ("repro.analysis.cost", None),
+    "CostModel": ("repro.analysis.cost", "CostModel"),
+    "cost_diagnostics": ("repro.analysis.cost", "cost_diagnostics"),
+    "policy_cost": ("repro.analysis.cost", "policy_cost"),
     "lint": ("repro.analysis.lint", None),
     "lint_paths": ("repro.analysis.lint", "lint_paths"),
     "lint_repo": ("repro.analysis.lint", "lint_repo"),

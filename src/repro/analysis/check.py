@@ -11,10 +11,15 @@ execution:
   DC104  mixed-device region set: device pins disagree / pin + dp-shard mix
   DC105  delta region without steady-state reuse (pays double-buffer rent)
   DC106  policy sharded wider than the mesh (ERROR: compile would raise)
+  DC110  cost model predicts heavy padding waste across the policy's arenas
+  DC111  dominated policy: a candidate-grid alternative predicts >=20% less
+         motion at no more DMA calls or staging (analysis.cost)
+  DC112  predicted host staging footprint exceeds the declared budget
 
 Everything here is pure host-side analysis over ``partition_tree`` and
-``arena.plan`` — no device transfers, no program compilation — so it is
-safe to run over the whole scenario registry in CI
+``arena.plan`` (the DC11x layer adds :mod:`repro.analysis.cost`'s exact
+motion predictions) — no device transfers, no program compilation — so it
+is safe to run over the whole scenario registry in CI
 (``python -m repro.analysis.check``).
 """
 from __future__ import annotations
@@ -41,27 +46,48 @@ def _mesh_size(mesh_size: Optional[int]) -> int:
     return jax.device_count()
 
 
+def _live_device_count() -> Optional[int]:
+    """The host's actual device count, None when jax is unavailable —
+    DC106's message names it whenever it disagrees with the analyzed mesh
+    so a ``--mesh-size`` what-if can't be mistaken for the live verdict."""
+    try:
+        import jax
+
+        return jax.device_count()
+    except Exception:
+        return None
+
+
 def check_policy(tree: Any, policy: Union[str, TransferPolicy],
                  mesh_size: Optional[int] = None,
                  steady_reuse: Optional[bool] = None,
-                 where: str = "policy") -> List[Diagnostic]:
+                 where: str = "policy",
+                 mutate_paths: Optional[List[str]] = None,
+                 staging_budget_bytes: Optional[int] = None
+                 ) -> List[Diagnostic]:
     """All DC1xx diagnostics for one (treedef, policy, mesh) triple.
 
     ``steady_reuse`` declares whether the workload re-ships this tree
     steadily with partial mutation (the condition under which a delta
     region earns its double-buffer rent); ``None`` means unknown and
-    skips DC105.  Returns diagnostics in code order; empty means clean.
+    skips DC105.  ``mutate_paths`` is the steady mutation set for the
+    DC11x cost layer (``None`` = unknown: DC111 compares cold motion
+    only); ``staging_budget_bytes`` arms DC112.  Returns diagnostics in
+    code order; empty means clean.
     """
     policy = TransferPolicy.parse(policy)
     out: List[Diagnostic] = []
     mesh = _mesh_size(mesh_size)
 
     if policy.num_shards > mesh:
+        live = _live_device_count()
+        live_note = "" if live is None or live == mesh else (
+            f" (analyzed mesh {mesh} != live jax.device_count()={live})")
         out.append(Diagnostic(
             "DC106",
             f"policy shards over {policy.num_shards} devices but the "
             f"mesh has {mesh}; compiling would raise at executor "
-            f"construction",
+            f"construction" + live_note,
             where=where))
 
     paths = leaf_paths(tree)
@@ -141,6 +167,14 @@ def check_policy(tree: Any, policy: Union[str, TransferPolicy],
             f"against one device of the mesh",
             where=where))
 
+    # the DC11x cost-model layer (predicted waste / dominance / footprint)
+    from .cost import cost_diagnostics
+
+    out.extend(cost_diagnostics(tree, policy, mutate_paths=mutate_paths,
+                                mesh_size=mesh,
+                                staging_budget_bytes=staging_budget_bytes,
+                                where=where))
+
     out.sort(key=lambda d: d.code)
     return out
 
@@ -151,22 +185,27 @@ def _flat_leaves(tree: Any) -> List[Any]:
     return jax.tree_util.tree_flatten(tree)[0]
 
 
-def check_scenario(sc: Any, mesh_size: Optional[int] = None
+def check_scenario(sc: Any, mesh_size: Optional[int] = None,
+                   staging_budget_bytes: Optional[int] = None
                    ) -> List[Diagnostic]:
     """DC1xx diagnostics for one registry scenario's declared policy
     (empty when it declares none).  Steady reuse is read off the scenario:
     ``params['mutate_paths']`` or a declared steady region expectation
-    signal a steady-state loop."""
+    signal a steady-state loop, and the scenario's steady mutation set
+    feeds the DC11x cost layer."""
     policy = sc.policy()
     if policy is None:
         return []
-    steady_reuse = bool(sc.params.get("mutate_paths")) \
-        or sc.steady_region_expected is not None
+    mutate = list(sc.steady_mutate_paths())
+    steady_reuse = bool(mutate) or sc.steady_region_expected is not None
     return check_policy(sc.build(), policy, mesh_size=mesh_size,
-                        steady_reuse=steady_reuse, where=sc.name)
+                        steady_reuse=steady_reuse, where=sc.name,
+                        mutate_paths=mutate if steady_reuse else None,
+                        staging_budget_bytes=staging_budget_bytes)
 
 
-def check_registry(size: str = "quick", mesh_size: Optional[int] = None
+def check_registry(size: str = "quick", mesh_size: Optional[int] = None,
+                   staging_budget_bytes: Optional[int] = None
                    ) -> Dict[str, List[Diagnostic]]:
     """Run :func:`check_scenario` over every registry scenario that
     declares a policy.  Keys are scenario names; clean scenarios map to
@@ -177,7 +216,9 @@ def check_registry(size: str = "quick", mesh_size: Optional[int] = None
     for sc in iter_scenarios(size):
         if sc.declared_policy is None:
             continue
-        out[sc.name] = check_scenario(sc, mesh_size=mesh_size)
+        out[sc.name] = check_scenario(
+            sc, mesh_size=mesh_size,
+            staging_budget_bytes=staging_budget_bytes)
     return out
 
 
@@ -193,9 +234,15 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "(default: jax.device_count())")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 on warnings too, not just errors")
+    ap.add_argument("--staging-budget-mb", type=float, default=None,
+                    help="arm DC112: warn when a policy's predicted host "
+                         "staging footprint exceeds this many MB")
     args = ap.parse_args(argv)
 
-    results = check_registry(args.size, mesh_size=args.mesh_size)
+    budget = None if args.staging_budget_mb is None \
+        else int(args.staging_budget_mb * 1e6)
+    results = check_registry(args.size, mesh_size=args.mesh_size,
+                             staging_budget_bytes=budget)
     n_diags = n_errors = 0
     for name in sorted(results):
         for diag in results[name]:

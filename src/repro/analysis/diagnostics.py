@@ -35,6 +35,14 @@ CODES = {
                        "(retained state can never be hit)"),
     "DC106": (ERROR, "stale mesh: policy shards over more devices than "
                      "the mesh has"),
+    "DC110": (WARNING, "cost model predicts heavy padding waste: most "
+                       "arena bytes shipped are alignment/shard-tail "
+                       "padding"),
+    "DC111": (WARNING, "dominated policy: a candidate-grid alternative "
+                       "predicts >=20% less motion at no more DMA calls "
+                       "or staging"),
+    "DC112": (WARNING, "predicted host staging footprint exceeds the "
+                       "declared budget"),
     # -- repo lint (DC2xx) --------------------------------------------------
     "DC201": (ERROR, "raw jax.device_put/jax.block_until_ready outside the "
                      "engine/schemes/driver allowlist"),

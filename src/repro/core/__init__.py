@@ -20,7 +20,8 @@ from .schemes import (TransferLedger, TransferScheme, UVMScheme, MarshalScheme,
                       transfer_scheme)
 from .policy import (PolicyRule, ProgramFuture, ProgramStats, Region,
                      TransferPolicy, TransferProgram, TransferTimeout,
-                     UnsupportedPolicyError, compile_program, partition_tree)
+                     UnsupportedPolicyError, candidate_specs, compile_program,
+                     enumerate_policies, partition_tree)
 from .deepcopy import (full_deepcopy, selective_deepcopy, host_skeleton,
                        tree_bytes)
 
@@ -40,6 +41,7 @@ __all__ = [
     "PointerChainScheme", "SCHEMES", "make_scheme", "transfer_scheme",
     "PolicyRule", "ProgramFuture", "ProgramStats", "Region", "TransferPolicy",
     "TransferProgram", "TransferTimeout", "UnsupportedPolicyError",
-    "compile_program", "partition_tree",
+    "candidate_specs", "compile_program", "enumerate_policies",
+    "partition_tree",
     "full_deepcopy", "selective_deepcopy", "host_skeleton", "tree_bytes",
 ]

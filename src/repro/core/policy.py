@@ -290,6 +290,72 @@ class TransferPolicy:
             for r in self.rules)
         return TransferPolicy(rules)
 
+    def with_rule(self, pattern: str,
+                  spec: Union[str, TransferSpec]) -> "TransferPolicy":
+        """This policy with ``pattern``'s spec replaced (the pattern must
+        already be a rule — a policy's region structure is part of its
+        identity; the autotuner varies specs, never patterns)."""
+        spec = TransferSpec.parse(spec)
+        if pattern not in {r.pattern for r in self.rules}:
+            raise UnsupportedPolicyError(
+                f"pattern {pattern!r} is not a rule of this policy")
+        return TransferPolicy(tuple(
+            PolicyRule(r.pattern, spec) if r.pattern == pattern else r
+            for r in self.rules))
+
+    def neighbors(self, mesh_size: int = 1) -> Tuple["TransferPolicy", ...]:
+        """Every policy differing from this one in exactly ONE rule's spec,
+        over the bounded candidate grid (:func:`candidate_specs`) — the
+        local-search moves of the cost-guided autotuner."""
+        out: List[TransferPolicy] = []
+        for rule in self.rules:
+            for spec in candidate_specs(mesh_size):
+                if spec != rule.spec:
+                    out.append(self.with_rule(rule.pattern, spec))
+        return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# the bounded candidate grid (autotuner / DC111 search space)
+# ---------------------------------------------------------------------------
+
+def candidate_specs(mesh_size: int = 1) -> Tuple[TransferSpec, ...]:
+    """The bounded per-region spec grid the cost-guided search enumerates:
+    tight-packed marshal × {plain, delta} × {unsharded, @dp<mesh>} plus
+    unsharded pointerchain.
+
+    Deliberately excluded: ``uvm`` (demand paging defers the motion to
+    access time — zero pass-time bytes would trivially "win" while changing
+    access semantics), device pins (placement is a correctness decision,
+    not a cost one) and ``align>1`` (the grid is the tight-packing
+    frontier; alignment only ever adds padding bytes).
+    """
+    mesh_size = int(mesh_size)
+    out = [TransferSpec("marshal"),
+           TransferSpec("marshal", delta=True),
+           TransferSpec("pointerchain")]
+    if mesh_size > 1:
+        out.append(TransferSpec("marshal", sharding=mesh_size))
+        out.append(TransferSpec("marshal", delta=True, sharding=mesh_size))
+    return tuple(out)
+
+
+def enumerate_policies(patterns: Tuple[str, ...], mesh_size: int = 1,
+                       specs: Optional[Tuple[TransferSpec, ...]] = None
+                       ) -> List[TransferPolicy]:
+    """The full bounded grid over a FIXED region structure: every assignment
+    of candidate specs to the given rule patterns (which must include the
+    required ``**`` default).  ``len(specs) ** len(patterns)`` policies —
+    the autotuner prunes this statically before any device touches data."""
+    import itertools
+
+    specs = candidate_specs(mesh_size) if specs is None else tuple(specs)
+    out: List[TransferPolicy] = []
+    for combo in itertools.product(specs, repeat=len(patterns)):
+        out.append(TransferPolicy(tuple(
+            PolicyRule(p, s) for p, s in zip(patterns, combo))))
+    return out
+
 
 # ---------------------------------------------------------------------------
 # region partitioning

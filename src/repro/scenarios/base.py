@@ -280,6 +280,19 @@ class Scenario:
     region_expected: Optional[Mapping[str, Motion]] = None
     steady_region_expected: Optional[Mapping[str, Motion]] = None
 
+    def steady_mutate_paths(self) -> Tuple[str, ...]:
+        """The scenario's steady mutation set: the leaf paths a warm pass
+        mutates before re-transfer (``params['mutate_paths']``, or the
+        legacy singular ``params['mutate_path']``).  Empty when the
+        scenario declares none — i.e. warm passes are clean repeats.  The
+        single source the steady harness AND the static analyzers
+        (``analysis.check`` / ``analysis.cost``) read, so predictions and
+        measurements always describe the same mutation."""
+        paths = self.params.get("mutate_paths")
+        if paths is None and "mutate_path" in self.params:
+            paths = (self.params["mutate_path"],)
+        return tuple(paths or ())
+
     def policy(self, spec: Union[str, TransferSpec, None] = None
                ) -> Optional[TransferPolicy]:
         """The scenario's transfer policy: with ``spec``, the one-rule

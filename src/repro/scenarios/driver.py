@@ -245,9 +245,7 @@ class SteadyMeasurement:
 
 
 def _steady_mutate_paths(sc: Scenario) -> List[str]:
-    paths = sc.params.get("mutate_paths")
-    if paths is None and "mutate_path" in sc.params:
-        paths = (sc.params["mutate_path"],)
+    paths = sc.steady_mutate_paths()
     if not paths:
         raise ValueError(f"{sc.name} is not a steady-state scenario "
                          "(no mutate_path/mutate_paths param)")
@@ -445,8 +443,7 @@ def run_policy_scenario(sc: Scenario,
         program = (session or get_session()).compile(tree, policy)
     declared = sc.declared_policy is not None and \
         policy == TransferPolicy.parse(sc.declared_policy)
-    mutate = list(sc.params.get("mutate_paths")
-                  or filter(None, [sc.params.get("mutate_path")]))
+    mutate = list(sc.steady_mutate_paths())
     cold_expected = derive_policy_motion(tree, policy)
     out: List[PolicyMeasurement] = []
     cur = tree

@@ -4,6 +4,9 @@ import sys
 # Tests run on the single real CPU device (the dry-run subprocesses force
 # their own device count; never set XLA_FLAGS here).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, so the benchmark harness (benchmarks.bench_schema,
+# benchmarks.autotune) is importable no matter where pytest was launched
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
 import numpy as np

@@ -47,10 +47,13 @@ def test_default_rule_exempt_from_dead_rule_checks():
 
 
 def test_dc103_shard_tail_padding():
-    # a 3-element bucket on an 8-way mesh pads to 8: 5/8 > TAIL_PADDING_WARN
+    # a 3-element bucket on an 8-way mesh pads to 8: 5/8 > TAIL_PADDING_WARN.
+    # The cost layer agrees from its own angle: DC110 (most shipped bytes
+    # are padding) and DC111 (the unsharded alternative moves 12 bytes,
+    # not 32, in 1 DMA) fire on the same policy.
     tree = {"tiny": np.zeros(3, np.float32)}
     diags = check_policy(tree, "**=marshal@dp8", mesh_size=8)
-    assert _codes(diags) == ["DC103"]
+    assert _codes(diags) == ["DC103", "DC110", "DC111"]
     assert severity_of("DC103") == "warning"
 
 
@@ -89,6 +92,79 @@ def test_dc106_policy_wider_than_mesh_is_error():
     assert "DC106" in _codes(diags)
     assert errors(diags)
     assert all(d.is_error for d in diags if d.code == "DC106")
+
+
+def test_dc106_message_names_live_device_count():
+    # analyzed under a what-if --mesh-size that differs from the host: the
+    # message must carry the live jax.device_count() so the what-if verdict
+    # can't be mistaken for the live one
+    import jax
+
+    live = jax.device_count()
+    mesh = live + 1
+    [d] = [d for d in check_policy(_tree(),
+                                   f"params/**=marshal@dp{mesh + 7}; "
+                                   f"**=marshal", mesh_size=mesh)
+           if d.code == "DC106"]
+    assert f"mesh has {mesh}" in d.message
+    assert f"live jax.device_count()={live}" in d.message
+
+
+def test_dc106_message_silent_on_live_mesh():
+    # analyzing AT the live mesh: no confusing live-count suffix
+    import jax
+
+    live = jax.device_count()
+    [d] = [d for d in check_policy(_tree(),
+                                   f"params/**=marshal@dp{live + 7}; "
+                                   f"**=marshal", mesh_size=live)
+           if d.code == "DC106"]
+    assert "live jax.device_count()" not in d.message
+
+
+# -- DC11x: the cost-model advisory layer -----------------------------------
+
+def test_dc110_predicted_padding_waste():
+    # align512 over tiny leaves: nearly every shipped arena byte is padding
+    diags = check_policy(_tree(), "**=marshal+align512", mesh_size=1)
+    assert "DC110" in _codes(diags)
+    [d] = [d for d in diags if d.code == "DC110"]
+    assert "padding" in d.message and not d.is_error
+
+
+def test_dc111_dominated_by_tight_packing():
+    # the tight-marshal candidate ships ~8x fewer bytes at the same one
+    # DMA per bucket and less staging: the aligned spec is dominated
+    diags = check_policy(_tree(), "**=marshal+align512", mesh_size=1)
+    assert "DC111" in _codes(diags)
+
+
+def test_dc111_silent_on_sensible_policy():
+    diags = check_policy(_tree(), "params/**=marshal; **=marshal",
+                         mesh_size=1, steady_reuse=True)
+    assert "DC111" not in _codes(diags)
+
+
+def test_dc111_delta_never_dominates_on_staging_rent():
+    # a delta alternative would predict 0 steady bytes for the untouched
+    # params region, but its double-buffered staging (2x arena) breaks
+    # Pareto dominance — the registry's declared policies rely on this
+    diags = check_policy(_tree(), "params/**=marshal; **=marshal+delta",
+                         mesh_size=1, steady_reuse=True,
+                         mutate_paths=["opt.m"])
+    assert "DC111" not in _codes(diags)
+
+
+def test_dc112_staging_budget():
+    tree = _tree()   # 544 payload bytes, all-marshal staging = 544
+    over = check_policy(tree, "**=marshal", mesh_size=1,
+                        staging_budget_bytes=100)
+    assert "DC112" in _codes(over)
+    under = check_policy(tree, "**=marshal", mesh_size=1,
+                         staging_budget_bytes=10_000)
+    assert "DC112" not in _codes(under)
+    unarmed = check_policy(tree, "**=marshal", mesh_size=1)
+    assert "DC112" not in _codes(unarmed)
 
 
 def test_diagnostic_str_carries_where_and_severity():

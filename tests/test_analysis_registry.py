@@ -38,7 +38,12 @@ def test_declared_policies_clean_at_mesh(mesh):
 
 
 def test_check_registry_runs_end_to_end():
-    results = check_registry("quick", mesh_size=1)
+    # analyze at the LIVE mesh (None), not a pinned 1: scenario families
+    # declare dp{jax.device_count()} policies, so pinning mesh_size=1 on a
+    # multi-device host turns the registry walk into a what-if that
+    # correctly DC106-errors — which is not what this end-to-end test is
+    # probing
+    results = check_registry("quick", mesh_size=None)
     assert set(results) == {sc.name for sc in _declared()}
     for name, diags in results.items():
         assert not [d for d in diags if d.is_error], (name, diags)

@@ -1,0 +1,117 @@
+"""The cost-guided autotuner and the baseline-diff perf gate.
+
+Covers the three CI-facing contracts of the tuning loop: the measured
+winner is never worse than the declared policy (it is always in the
+measured set), its row speaks schema v8, and ``bench_schema --baseline``
+actually fails the build when a fresh steady wall regresses against the
+committed artifact.
+"""
+import copy
+import json
+import os
+
+import pytest
+
+from benchmarks import bench_schema
+from benchmarks.autotune import tune_scenario
+from benchmarks.bench_schema import (SCHEMA_VERSION, V8_DEFAULTS,
+                                     baseline_diff, run_baseline,
+                                     upgrade_row)
+from repro.analysis.cost import CostModel
+from repro.scenarios import iter_scenarios
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+# -- schema v8 ---------------------------------------------------------------
+
+def test_upgrade_row_v7_gains_v8_defaults():
+    row = upgrade_row({"schema": 7, "scenario": "s", "family": "f",
+                       "scheme": "marshal", "cached_wall_us": 10.0})
+    assert row["schema"] == SCHEMA_VERSION == 8
+    for key, default in V8_DEFAULTS.items():
+        assert row[key] == default
+    assert row["cached_wall_us"] == 10.0
+
+
+def test_upgrade_row_rejects_future_schema():
+    with pytest.raises(ValueError):
+        upgrade_row({"schema": SCHEMA_VERSION + 1, "scenario": "s"})
+
+
+# -- the tuning loop ---------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tuned_row():
+    [sc] = iter_scenarios("smoke", only=("steady_reuse",))
+    # uncalibrated nominal model: the loop must not need device probes
+    return tune_scenario(sc, CostModel(), top_k=2, passes=1)
+
+
+def test_tuned_never_worse_than_declared(tuned_row):
+    # the declared policy is always in the measured set and the winner is
+    # the measured argmin, so this holds by construction — and the static
+    # == measured ledger assertions inside tune_scenario already ran
+    assert tuned_row["tuned_steady_wall_us"] \
+        <= tuned_row["declared_steady_wall_us"]
+
+
+def test_tuned_row_is_schema_v8(tuned_row):
+    row = tuned_row
+    assert row["schema"] == SCHEMA_VERSION
+    assert row["scheme"] == "autotune"
+    assert row["policy"] and row["tuned_policy"]
+    assert row["candidates"] >= 3          # the 1-device grid per region
+    assert 1 <= row["measured"] <= row["candidates"]
+    assert row["predicted_cold_bytes"] == row["h2d_bytes"]
+    assert row["predicted_steady_wall_us"] is not None
+    # the row keys on the DECLARED policy so its trajectory is stable
+    # across tuning outcomes
+    assert bench_schema.row_key(row)[2] == row["policy"]
+
+
+# -- the baseline-diff CI gate -----------------------------------------------
+
+def _committed_rows():
+    with open(os.path.join(REPO, "BENCH_transfer.json")) as f:
+        return json.load(f)
+
+
+def test_baseline_gate_clean_on_identical_rows(tmp_path, capsys):
+    rows = _committed_rows()
+    old, new = str(tmp_path / "old.json"), str(tmp_path / "new.json")
+    for path in (old, new):
+        with open(path, "w") as f:
+            json.dump(rows, f)
+    assert run_baseline(old, new) == 0
+    assert "baseline gate passed" in capsys.readouterr().out
+
+
+def test_baseline_gate_fails_on_inflated_steady_wall(tmp_path, capsys):
+    rows = _committed_rows()
+    inflated = copy.deepcopy(rows)
+    victims = 0
+    for row in inflated:
+        if victims < 2 and row.get("steady_wall_us"):
+            row["steady_wall_us"] *= 10
+            victims += 1
+    assert victims == 2
+    old, new = str(tmp_path / "old.json"), str(tmp_path / "new.json")
+    with open(old, "w") as f:
+        json.dump(rows, f)
+    with open(new, "w") as f:
+        json.dump(inflated, f)
+    assert run_baseline(old, new) == 1
+    assert "BASELINE GATE FAILED" in capsys.readouterr().out
+    # the CLI agrees end to end
+    assert bench_schema._main([old, new, "--baseline"]) == 1
+    assert bench_schema._main([old, old, "--baseline"]) == 0
+
+
+def test_baseline_diff_reports_added_and_retired(tmp_path):
+    rows = _committed_rows()
+    cells = baseline_diff(rows[1:], rows[:-1])
+    status = {c["status"] for c in cells}
+    assert status == {"both", "added", "retired"}
+    both = [c for c in cells if c["status"] == "both"]
+    assert all(c["ratio"] == 1.0 for c in both if c["ratio"])

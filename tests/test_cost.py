@@ -1,0 +1,198 @@
+"""The static cost model (DESIGN.md §14) and its exactness contract.
+
+The load-bearing test here is the three-way differential: for every
+registry scenario, the purely static prediction (``policy_cost`` over leaf
+signatures), the structural derivation (``derive_*_motion`` over the real
+tree) and the MEASURED TransferProgram ledger must agree byte-for-byte,
+cold and steady, per region.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis.cost import (CostModel, LeafSig, PADDING_WASTE_WARN,
+                                 STEADY_WEIGHT, policy_cost, signature_tree)
+from repro.core import TransferPolicy, arena, candidate_specs, \
+    enumerate_policies
+from repro.scenarios.base import (derive_policy_motion,
+                                  derive_steady_policy_motion,
+                                  iter_scenarios)
+from repro.scenarios.driver import run_policy_scenario
+
+
+def _tree():
+    return {"params": {"w": np.arange(64, dtype=np.float32),
+                       "b": np.arange(8, dtype=np.float32)},
+            "opt": {"m": np.arange(64, dtype=np.float32)}}
+
+
+# -- LeafSig / signature trees ----------------------------------------------
+
+def test_leafsig_nbytes():
+    assert LeafSig((4, 4), np.float32).nbytes == 64
+    assert LeafSig((), np.float64).nbytes == 8
+    assert LeafSig((0,), np.float32).nbytes == 0
+
+
+def test_signature_tree_prices_identically():
+    # the whole point of LeafSig: a cost analysis needs shapes, not buffers
+    tree = _tree()
+    pol = "params/**=marshal+delta; **=marshal@dp4"
+    real = policy_cost(tree, pol, ["opt.m"])
+    sig = policy_cost(signature_tree(tree), pol, ["opt.m"])
+    assert [r.key for r in real.regions] == [r.key for r in sig.regions]
+    for a, b in zip(real.regions, sig.regions):
+        assert a.cold.as_tuple() == b.cold.as_tuple()
+        assert a.steady.as_tuple() == b.steady.as_tuple()
+        assert (a.staging_bytes, a.padding_bytes, a.payload_bytes) \
+            == (b.staging_bytes, b.padding_bytes, b.payload_bytes)
+
+
+# -- the wall half: CostModel math, fit, persistence ------------------------
+
+def test_costmodel_wall_math():
+    m = CostModel(latency_us=10.0, bandwidth_gbps=1.0)
+    # 2 DMAs at 10us + 1000 bytes over 1 GB/s (= 1e3 bytes/us) = 21us
+    assert m.wall_us((1000, 2)) == pytest.approx(21.0)
+    cost = policy_cost(_tree(), "**=marshal")
+    assert m.cold_wall_us(cost) == pytest.approx(
+        m.wall_us((cost.cold_bytes, cost.cold_calls)))
+    assert m.objective_us(cost) == pytest.approx(
+        m.cold_wall_us(cost) + STEADY_WEIGHT * m.steady_wall_us(cost))
+
+
+def test_costmodel_fit_recovers_affine_probes():
+    # probes manufactured on an exact line: 5us latency, 1 GB/s bandwidth
+    probes = [(n, 5.0 + n / 1e3) for n in (1 << 16, 1 << 20, 1 << 22)]
+    m = CostModel._fit(probes)
+    assert m.calibrated
+    assert m.latency_us == pytest.approx(5.0, abs=1e-3)
+    assert m.bandwidth_gbps == pytest.approx(1.0, abs=1e-3)
+
+
+def test_costmodel_fit_clamps_degenerate():
+    m = CostModel._fit([(1000, 1.0), (2000, 0.5)])   # negative slope
+    assert m.latency_us > 0 and m.bandwidth_gbps > 0
+    with pytest.raises(ValueError):
+        CostModel._fit([(1000, 1.0)])
+
+
+def test_costmodel_save_load_roundtrip(tmp_path):
+    m = CostModel._fit([(1 << 16, 30.0), (1 << 20, 150.0)])
+    path = str(tmp_path / "BENCH_costmodel.json")
+    m.save(path)
+    back = CostModel.load(path)
+    assert back == m
+    with open(path) as f:
+        assert json.load(f)["schema"] == 1
+    assert CostModel.load_or_default(str(tmp_path / "missing.json")) \
+        == CostModel()
+
+
+# -- the exact half: footprints ---------------------------------------------
+
+def test_policy_cost_staging_and_padding():
+    tree = {"tiny": np.arange(3, dtype=np.float32)}     # 12 payload bytes
+    sharded = policy_cost(tree, "**=marshal@dp8")
+    # one 3-elem f32 bucket shard-padded to 8 elems: 32 arena bytes
+    assert sharded.payload_bytes == 12
+    assert sharded.padding_bytes == 20
+    assert sharded.arena_bytes == 32
+    assert sharded.staging_bytes == 32
+    assert sharded.padding_fraction() == pytest.approx(20 / 32)
+    assert sharded.padding_fraction() > PADDING_WASTE_WARN
+
+    delta = policy_cost(tree, "**=marshal+delta")
+    # delta implies double-buffered staging: 2x the (unpadded) arena
+    assert delta.staging_bytes == 2 * delta.arena_bytes
+
+    chain = policy_cost(tree, "**=pointerchain")
+    assert chain.staging_bytes == 0 and chain.arena_bytes == 0
+
+
+def test_policy_cost_matches_arena_plan():
+    tree = _tree()
+    cost = policy_cost(tree, "**=marshal+align128@dp2")
+    [region] = cost.regions
+    import jax
+    layout = arena.plan(jax.tree_util.tree_flatten(tree)[0], 128,
+                        shard_multiple=2)
+    assert region.arena_bytes == layout.total_bytes()
+    assert region.padding_bytes \
+        == layout.total_bytes() - layout.payload_bytes()
+
+
+def test_policy_cost_steady_mutation_set():
+    cost = policy_cost(_tree(), "params/**=marshal+delta; **=marshal",
+                       mutate_paths=["params.b"])
+    params = cost.region("params/**")
+    rest = cost.region("**")
+    # delta is arena-granular: ONE dirty leaf re-ships the whole region
+    # arena in one DMA (matches the runtime's dirty-arena contract)...
+    assert params.steady.as_tuple() == (288, 1)
+    # ...and a clean delta region ships nothing at all
+    clean = policy_cost(_tree(), "params/**=marshal+delta; **=marshal",
+                        mutate_paths=["opt.m"])
+    assert clean.region("params/**").steady.as_tuple() == (0, 0)
+    # the non-delta region re-ships its whole cold set every pass
+    assert rest.steady.as_tuple() == rest.cold.as_tuple()
+
+
+def test_motion_objective_weighting():
+    cost = policy_cost(_tree(), "**=marshal", mutate_paths=[])
+    assert cost.motion_objective() \
+        == cost.cold_bytes + STEADY_WEIGHT * cost.steady_bytes
+    assert cost.motion_objective(steady_weight=0) == cost.cold_bytes
+
+
+# -- the candidate grid ------------------------------------------------------
+
+def test_candidate_specs_bounded():
+    single = candidate_specs(1)
+    assert len(single) == 3
+    assert all(s.num_shards == 1 for s in single)
+    mesh = candidate_specs(8)
+    assert len(mesh) == 5
+    assert {s.num_shards for s in mesh} == {1, 8}
+
+
+def test_enumerate_policies_full_grid():
+    pols = enumerate_policies(("params/**", "**"), mesh_size=1)
+    assert len(pols) == 9          # 3^2
+    assert all(isinstance(p, TransferPolicy) for p in pols)
+    assert len({str(p) for p in pols}) == 9
+
+
+# -- the three-way differential over the whole registry ---------------------
+
+@pytest.mark.parametrize(
+    "sc", iter_scenarios("smoke"), ids=lambda sc: sc.name)
+def test_static_prediction_equals_measured_ledger(sc):
+    """static policy_cost == structural derive_*_motion == measured
+    TransferProgram ledger, per region, cold AND steady."""
+    tree = sc.build()
+    policy = sc.policy() or TransferPolicy.of("marshal")
+    mutate = list(sc.steady_mutate_paths())
+    cost = policy_cost(signature_tree(tree), policy, mutate)
+
+    # static == structural (whole-tree policy-level derivation)
+    structural_cold = derive_policy_motion(tree, policy)
+    structural_steady = derive_steady_policy_motion(tree, policy, mutate)
+    assert {r.key for r in cost.regions} == set(structural_cold)
+    for rc in cost.regions:
+        assert rc.cold.as_tuple() == structural_cold[rc.key].as_tuple()
+        assert rc.steady.as_tuple() == structural_steady[rc.key].as_tuple()
+
+    # static == measured (real compiled program, cold pass + warm pass)
+    cold, warm = run_policy_scenario(sc, policy, tree=tree, passes=2)
+    assert cold.ok and cold.motion_ok and warm.ok and warm.motion_ok
+    assert (cost.cold_bytes, cost.cold_calls) \
+        == (cold.h2d_bytes, cold.h2d_calls)
+    assert (cost.steady_bytes, cost.steady_calls) \
+        == (warm.h2d_bytes, warm.h2d_calls)
+    for rc in cost.regions:
+        assert (cold.regions[rc.key]["h2d_bytes"],
+                cold.regions[rc.key]["h2d_calls"]) == rc.cold.as_tuple()
+        assert (warm.regions[rc.key]["h2d_bytes"],
+                warm.regions[rc.key]["h2d_calls"]) == rc.steady.as_tuple()

@@ -1,0 +1,68 @@
+"""Property tests for the static cost model's monotonicity laws.
+
+Two laws the point predictions of ``test_cost.py`` cannot pin down alone:
+
+* **Mutation monotonicity** — dirtying MORE leaves can never make a
+  policy's predicted steady traffic smaller.  (The autotuner's pruning
+  depends on this: a policy ranked under a superset mutation bound is a
+  safe bound for any subset workload.)
+* **Shard-padding monotonicity** — doubling the shard multiple can never
+  shrink predicted padding waste (each bucket rounds up to a coarser
+  multiple), and never changes the payload.
+"""
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.analysis.cost import policy_cost  # noqa: E402
+
+PATHS = ("params.w", "params.b", "opt.m", "opt.v", "state.step")
+
+
+def _tree():
+    return {"params": {"w": np.zeros(96, np.float32),
+                       "b": np.zeros(5, np.float32)},
+            "opt": {"m": np.zeros(96, np.float32),
+                    "v": np.zeros(33, np.float16)},
+            "state": {"step": np.zeros(1, np.int32)}}
+
+
+policies = st.sampled_from((
+    "**=marshal+delta",
+    "params/**=marshal+delta; **=marshal",
+    "params/**=marshal+delta@dp4; opt/**=marshal+delta; **=marshal",
+))
+mutation_sets = st.frozensets(st.sampled_from(PATHS))
+
+
+@settings(deadline=None, max_examples=40)
+@given(policy=policies, a=mutation_sets, b=mutation_sets)
+def test_steady_bytes_monotone_in_mutation_set(policy, a, b):
+    tree = _tree()
+    small = policy_cost(tree, policy, sorted(a))
+    big = policy_cost(tree, policy, sorted(a | b))
+    assert big.steady_bytes >= small.steady_bytes
+    assert big.steady_calls >= small.steady_calls
+    # per region too, not just in aggregate
+    for rs, rb in zip(small.regions, big.regions):
+        assert rb.key == rs.key
+        assert rb.steady.h2d_bytes >= rs.steady.h2d_bytes
+    # cold motion and footprints are mutation-independent
+    assert big.cold_bytes == small.cold_bytes
+    assert (big.staging_bytes, big.padding_bytes) \
+        == (small.staging_bytes, small.padding_bytes)
+
+
+@settings(deadline=None, max_examples=40)
+@given(sizes=st.lists(st.integers(1, 200), min_size=1, max_size=6),
+       k=st.sampled_from((1, 2, 3, 4, 8)))
+def test_padding_monotone_in_shard_multiple(sizes, k):
+    tree = {f"l{i}": np.zeros(n, np.float32) for i, n in enumerate(sizes)}
+    at_k = policy_cost(tree, f"**=marshal@dp{k}")
+    at_2k = policy_cost(tree, f"**=marshal@dp{2 * k}")
+    assert at_2k.padding_bytes >= at_k.padding_bytes
+    assert at_2k.payload_bytes == at_k.payload_bytes
+    assert at_2k.arena_bytes >= at_k.arena_bytes
+    assert at_k.padding_bytes >= 0
